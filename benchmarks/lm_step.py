@@ -1,0 +1,73 @@
+"""Framework-level step benchmarks (beyond-paper): wall time of one train
+step / decode token on CPU for reduced configs, digital vs RRAM-analog
+backend -- demonstrates the paper's technique as an LM serving mode and gives
+a regression-tracked number for the step pipeline itself.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, model_module
+from repro.configs.base import RRAMBackendConfig, TrainConfig
+from repro.models import params as PM
+from repro.models.common import Runtime
+from repro.models.rram import program_rram
+from repro.train.train_loop import make_train_step
+from repro.train.optimizer import adamw_init
+from .common import time_call
+
+ARCHS = ["qwen3-1.7b", "rwkv6-1.6b", "mixtral-8x7b"]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    rows = []
+    b, t = (2, 32) if quick else (4, 128)
+    for arch_name in ARCHS:
+        arch = get_arch(arch_name)
+        cfg = arch.reduced()
+        mod = model_module(cfg)
+        prm = PM.materialize(mod.init_specs(cfg), jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, t), 0, cfg.vocab)
+        batch = {"tokens": tokens, "labels": tokens}
+
+        step = jax.jit(make_train_step(mod, cfg, TrainConfig()))
+        opt = adamw_init(prm)
+        us = time_call(lambda: step(prm, opt, batch))
+        rows.append({"name": f"lm/{arch_name}/train_step", "us_per_call": round(us),
+                     "tokens_per_s": round(b * t / (us * 1e-6))})
+
+        rt = Runtime()
+        _, caches = mod.prefill(prm, batch, cfg, rt, 64) \
+            if cfg.family != "rwkv6" else mod.prefill(prm, batch, cfg, rt)
+        tok = tokens[:, :1]
+        dstep = jax.jit(lambda p, tk, c: mod.decode_step(p, tk, c, cfg, rt))
+        us = time_call(lambda: dstep(prm, tok, caches))
+        rows.append({"name": f"lm/{arch_name}/decode_step",
+                     "us_per_call": round(us),
+                     "tokens_per_s": round(b / (us * 1e-6))})
+
+    # RRAM analog serving backend (the paper's technique in the LM stack).
+    arch = get_arch("qwen3-1.7b")
+    cfg = arch.reduced()
+    mod = model_module(cfg)
+    prm = PM.materialize(mod.init_specs(cfg), jax.random.PRNGKey(0))
+    rcfg = RRAMBackendConfig(enabled=True, cell_rows=32, cell_cols=32, k_iters=5)
+    prm_rram, wstats = program_rram(prm, rcfg, jax.random.PRNGKey(2))
+    rt = Runtime(rram=rcfg, key=jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0, cfg.vocab)
+    _, caches = mod.prefill(prm_rram, {"tokens": tokens}, cfg, rt, 64)
+    dstep = jax.jit(lambda p, tk, c: mod.decode_step(p, tk, c, cfg, rt))
+    us = time_call(lambda: dstep(prm_rram, tokens[:, :1], caches))
+    rows.append({"name": "lm/qwen3-1.7b/decode_step_rram_ec",
+                 "us_per_call": round(us),
+                 "program_energy_j": f"{float(wstats.energy_j):.3e}",
+                 "program_latency_s": f"{float(wstats.latency_s):.3e}"})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,73 @@
+"""Paper Fig. 5 (strong scaling): fixed system (8x8 tile, 1024^2 cells =
+8192^2 capacity), problem size swept over the Supplementary-A matrix set
+(66 .. 65,025; surrogates with the published kappa / norms, DESIGN.md).
+
+Problems beyond ~16k^2 never materialize: the streamed engine generates
+capacity-sized blocks on demand (the paper's virtualization, with the
+reassignment normalization from section 2.3.2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm,
+                        get_device, rel_l2, rel_linf, streamed_corrected_mvm)
+from repro.core.matrices import ImplicitBandedMatrix, paper_matrix
+from repro.core.virtualization import reassignment_count
+
+GEOM = MCAGeometry(tile_rows=8, tile_cols=8, cell_rows=1024, cell_cols=1024)
+
+MATS_SMALL = ["bcsstk02", "wang2", "add32", "c-38"]
+MATS_BIG = [("dubcova1", 16129), ("helm3d01", 32226), ("dubcova2", 65025)]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    device = get_device("taox-hfox")
+    cfg = CrossbarConfig(device=device, geom=GEOM, k_iters=5, ec=True)
+    rows: List[Dict] = []
+    key = jax.random.PRNGKey(11)
+
+    for name in (MATS_SMALL if quick else MATS_SMALL):
+        a = jnp.asarray(paper_matrix(name), jnp.float32)
+        n = a.shape[0]
+        x = jax.random.normal(jax.random.fold_in(key, n), (n,))
+        b = a @ x
+        y, stats = jax.jit(lambda k: corrected_mvm(a, x, k, cfg))(
+            jax.random.fold_in(key, 2 * n))
+        norm = max(reassignment_count(n, n, GEOM), 1)
+        rows.append({
+            "name": f"strong/{name}/n{n}",
+            "eps_l2": float(rel_l2(y, b)), "eps_linf": float(rel_linf(y, b)),
+            "E_w": float(stats.energy_j), "L_w": float(stats.latency_s),
+            "E_w_norm": float(stats.energy_j) / norm,
+            "L_w_norm": float(stats.latency_s) / norm,
+            "reassignments": norm,
+        })
+
+    big = MATS_BIG[:1] if quick else MATS_BIG
+    cap = GEOM.capacity[0]
+    for name, n in big:
+        imp = ImplicitBandedMatrix(n=n, cap_m=cap, cap_n=cap, seed=n)
+        x = jax.random.normal(jax.random.fold_in(key, n), (n,))
+        b = imp.matvec(x)
+        y, stats = streamed_corrected_mvm(
+            imp.block, x, n, n, jax.random.fold_in(key, 3 * n), cfg)
+        norm = max(reassignment_count(n, n, GEOM), 1)
+        rows.append({
+            "name": f"strong/{name}/n{n}",
+            "eps_l2": float(rel_l2(y, b)), "eps_linf": float(rel_linf(y, b)),
+            "E_w": float(stats.energy_j), "L_w": float(stats.latency_s),
+            "E_w_norm": float(stats.energy_j) / norm,
+            "L_w_norm": float(stats.latency_s) / norm,
+            "reassignments": norm,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,56 @@
+"""Paper Fig. 4 (weak scaling): fixed problem (add32 surrogate, 4960^2),
+fixed 8x8 MCA tile, array cell size swept 32^2 .. 1024^2.
+
+Expected (paper section 2.3.1): relative error stays flat (~1e-3..4e-2 band);
+small cells pay heavily in write energy/latency because virtualization
+reassigns each MCA ceil(4960/(8*cell))^2 times; >=512^2 cells execute in one
+assignment.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm, get_device,
+                        rel_l2, rel_linf)
+from repro.core.matrices import make_spd_with_condition
+from repro.core.virtualization import reassignment_count
+
+N = 4960   # add32 dimension
+
+
+def run(quick: bool = True) -> List[Dict]:
+    cells = [32, 128, 512, 1024] if quick else [32, 64, 128, 256, 512, 1024]
+    devices = ["taox-hfox", "epiram"] if quick else [
+        "epiram", "ag-si", "alox-hfo2", "taox-hfox"]
+    a = jnp.asarray(
+        make_spd_with_condition(N, kappa=1.366769e2, norm2=5.749318e-2),
+        jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (N,))
+    b = a @ x
+    rows = []
+    for cell in cells:
+        geom = MCAGeometry(tile_rows=8, tile_cols=8,
+                           cell_rows=cell, cell_cols=cell)
+        for dev in devices:
+            cfg = CrossbarConfig(device=get_device(dev), geom=geom,
+                                 k_iters=5, ec=True)
+            y, stats = jax.jit(
+                lambda k: corrected_mvm(a, x, k, cfg))(jax.random.PRNGKey(cell))
+            rows.append({
+                "name": f"weak/{dev}/cell{cell}",
+                "eps_l2": float(rel_l2(y, b)),
+                "eps_linf": float(rel_linf(y, b)),
+                "E_w": float(stats.energy_j),
+                "L_w": float(stats.latency_s),
+                "reassignments": reassignment_count(N, N, geom),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,60 @@
+"""Paper Figs. 2-3 (and S1-S2): adjustableWriteandVerify iteration sweep
+k = 0..20, with and without the two-tier EC, on Iperturb and bcsstk02.
+
+Expected trends (validated in tests/test_paper_claims.py):
+  * error falls with k and plateaus -- at k~2 for TaOx/AlOx/EpiRAM and later
+    (k~11) for Ag-aSi (nonlinearity-limited verify gain);
+  * E_w and L_w grow linearly in k (passes = k+1);
+  * the EC curves sit about an order of magnitude below the raw curves.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CrossbarConfig, MCAGeometry, corrected_mvm, get_device, rel_l2
+from repro.core.matrices import make_iperturb, paper_matrix
+
+GEOM_66 = MCAGeometry(tile_rows=1, tile_cols=1, cell_rows=66, cell_cols=66)
+DEVICES = ["epiram", "ag-si", "alox-hfo2", "taox-hfox"]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    ks = [0, 1, 2, 5, 11, 20] if quick else list(range(21))
+    reps = 8 if quick else 100
+    mats = [("iperturb", jnp.asarray(make_iperturb(66), jnp.float32))]
+    if not quick:
+        mats.append(("bcsstk02", jnp.asarray(paper_matrix("bcsstk02"), jnp.float32)))
+    x = jax.random.normal(jax.random.PRNGKey(7), (66,))
+    rows = []
+    for mname, a in mats:
+        b = a @ x
+        for dev in DEVICES:
+            for ec in (False, True):
+                for k in ks:
+                    cfg = CrossbarConfig(device=get_device(dev), geom=GEOM_66,
+                                         k_iters=k, ec=ec)
+                    fn = jax.jit(lambda kk: corrected_mvm(a, x, kk, cfg))
+                    errs = []
+                    stats = None
+                    for r in range(reps):
+                        kk = jax.random.fold_in(
+                            jax.random.PRNGKey(1000 * k + r),
+                            hash(dev) % (2 ** 30))
+                        y, stats = fn(kk)
+                        errs.append(float(rel_l2(y, b)))
+                    rows.append({
+                        "name": f"wv/{mname}/{dev}/{'ec' if ec else 'raw'}/k{k}",
+                        "eps_l2": float(np.mean(errs)),
+                        "E_w": float(stats.energy_j),
+                        "L_w": float(stats.latency_s),
+                    })
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,56 @@
+"""Distributed MELISO+ solve: a large corrected MVM sharded over a device
+mesh (the paper's MPI distribution mapped onto shard_map + psum).
+
+    PYTHONPATH=src python examples/meliso_solver.py            # 8 host devices
+    PYTHONPATH=src python examples/meliso_solver.py --n 8192
+
+The matrix rows shard over the 'data' axis, the contraction over 'model';
+each device simulates its own 8x8 tile of MCAs, applies tier-1 EC locally,
+psums partials, and denoises on-node -- then we report accuracy vs the exact
+product plus the paper-convention write energy/latency (mean across MCAs).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CrossbarConfig, MCAGeometry, distributed_corrected_mvm,
+                        get_device, rel_l2, rel_linf)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--device", default="taox-hfox")
+    ap.add_argument("--cell", type=int, default=256)
+    ap.add_argument("--no-ec", action="store_true")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    n = args.n
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (n, n), jnp.float32) / jnp.sqrt(n)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
+    b = a @ x
+
+    local = (n // 2, n // 4)
+    geom = MCAGeometry(tile_rows=max(local[0] // args.cell, 1),
+                       tile_cols=max(local[1] // args.cell, 1),
+                       cell_rows=args.cell, cell_cols=args.cell)
+    cfg = CrossbarConfig(device=get_device(args.device), geom=geom,
+                         k_iters=5, ec=not args.no_ec)
+    y, stats = distributed_corrected_mvm(a, x, key, cfg, mesh)
+    print(f"n={n} device={args.device} ec={not args.no_ec} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    print(f"rel_l2={float(rel_l2(y, b)):.5f} rel_linf={float(rel_linf(y, b)):.5f}")
+    print(f"write energy (mean/MCA-system) = {float(stats.energy_j):.3e} J, "
+          f"latency = {float(stats.latency_s):.4f} s")
+    print(f"output sharding: {y.sharding}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: MELISO+ (distributed RRAM in-memory computing with integrated
+error correction) as a production-grade JAX training/inference framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,400 @@
+"""Loop-aware HLO cost model (flops / HBM bytes / collective wire bytes).
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once* --
+useless for scan-over-layers programs (a 48-layer scan is undercounted 48x),
+and the same holds for collectives inside loops.  This walker parses the
+optimized (post-SPMD) HLO text, builds the computation call graph, and
+evaluates costs bottom-up with **while-loop trip-count scaling** (trip counts
+recovered from the loop-condition compare constants, which is exactly how JAX
+lowers ``lax.scan``).
+
+Cost conventions (documented in DESIGN.md section 8):
+  * dot:      2 * prod(output dims) * prod(contraction dims) flops
+  * fusion:   inner flops, boundary-only bytes (fused temporaries are free)
+  * DUS/DS:   update/slice bytes (in-place semantics), not the full buffer
+  * gather/scatter: 2x output/update bytes
+  * collectives: ring wire-bytes model (see hlo_parse) x trip count
+  * elementwise/reduce: 1 flop per output element (matmuls dominate anyway)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo_text", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+    "u4": 1, "s4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<operands>[^)]*)\)(?P<attrs>.*)$")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                      r"(?:\{)?%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ZERO_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "domain",
+    "opt-barrier", "add-dependency",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_dims(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(txt: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(txt: str) -> float:
+    total = 0.0
+    for _, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    wire_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "HloCost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.wire += o.wire
+        for k, v in o.wire_by_op.items():
+            self.wire_by_op[k] = self.wire_by_op.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.bytes * k, self.wire * k,
+                       {kk: v * k for kk, v in self.wire_by_op.items()})
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, List[_Instr]], Optional[str]]:
+    comps: Dict[str, List[_Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and line.strip().endswith("{"):
+                cur = m.group("name")
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ops = [o.strip().lstrip("%") for o in m.group("operands").split(",")
+                   if o.strip()]
+            comps[cur].append(_Instr(
+                name=m.group("name"), shape=m.group("shape"),
+                op=m.group("op"), operands=ops, attrs=m.group("attrs"),
+                line=line))
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _collective_wire(op: str, bytes_out: float, g: int) -> float:
+    if op == "all-gather":
+        return bytes_out * (g - 1) / g
+    if op == "reduce-scatter":
+        return bytes_out * (g - 1)
+    if op == "all-reduce":
+        return 2 * bytes_out * (g - 1) / g
+    if op == "all-to-all":
+        return bytes_out * (g - 1) / g
+    return bytes_out   # collective-permute
+
+
+def _trip_count(cond_instrs: List[_Instr]) -> int:
+    """jax scans lower to while(cond: iv < C): the bound is the largest int
+    constant in the condition computation."""
+    best = 1
+    for ins in cond_instrs:
+        for c in _CONST_RE.findall(ins.line):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(ins: _Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _numel(ins.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs + ins.line)
+    contract = 1.0
+    if m and ins.operands:
+        lhs_shape = symtab.get(ins.operands[0], "")
+        dims = _shape_dims(lhs_shape)
+        if dims:
+            _, lhs_dims = dims[0]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo_text(text: str, record: Optional[List] = None) -> HloCost:
+    """Evaluate the entry cost.  With ``record`` a list, also appends
+    (scaled_bytes, scaled_flops, scaled_wire, op, name, shape[:80]) per leaf
+    instruction -- the per-instruction profile used by the perf loop."""
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return HloCost()
+    memo: Dict[str, HloCost] = {}
+    scale_of: Dict[str, float] = {entry: 1.0}
+
+    # Pre-pass: propagate execution multiplicity down the call graph so the
+    # recorder can attribute loop-scaled costs to leaf instructions.
+    def propagate(name: str, scale: float, depth: int = 0):
+        if name not in comps or depth > 64:
+            return
+        scale_of[name] = scale_of.get(name, 0.0) + scale if name != entry else 1.0
+        for ins in comps[name]:
+            if ins.op == "while":
+                mt = _TRIP_RE.search(ins.line)
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = int(mt.group(1)) if mt else (
+                    _trip_count(comps.get(mc.group(1), [])) if mc else 1)
+                if mb:
+                    propagate(mb.group(1), scale * trips, depth + 1)
+                if mc:
+                    propagate(mc.group(1), scale * trips, depth + 1)
+            else:
+                for target in _CALL_RE.findall(ins.line):
+                    propagate(target, scale, depth + 1)
+
+    fusion_bodies = set()
+    for il in comps.values():
+        for ins in il:
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if m:
+                    fusion_bodies.add(m.group(1))
+
+    if record is not None:
+        propagate(entry, 1.0)
+
+    def _root_op(name: str) -> str:
+        for ins in comps.get(name, []):
+            if "ROOT" in ins.line:
+                return ins.op
+        instrs = comps.get(name, [])
+        return instrs[-1].op if instrs else ""
+
+    def _dims_only(shape: str) -> str:
+        return ",".join(d for _, ds in _shape_dims(shape) for d in map(str, ds))
+
+    def _has_full_dus(name: str, out_shape: str) -> bool:
+        want = _dims_only(out_shape)
+        return any(i.op == "dynamic-update-slice"
+                   and _dims_only(i.shape) == want
+                   for i in comps.get(name, []))
+
+    def _convert_only(name: str) -> bool:
+        ok = {"parameter", "convert", "bitcast", "copy", "reshape"}
+        instrs = comps.get(name, [])
+        return bool(instrs) and all(i.op in ok for i in instrs)
+
+    def comp_cost(name: str, depth: int = 0) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return HloCost()
+        memo[name] = HloCost()       # cycle guard
+        total = HloCost()
+        symtab = {i.name: i.shape for i in comps[name]}
+        for ins in comps[name]:
+            c = _instr_cost(ins, symtab, depth)
+            if (record is not None and name not in fusion_bodies
+                    and ins.op not in ("while", "call", "conditional")):
+                sc = scale_of.get(name, 1.0)
+                if c.bytes + c.flops + c.wire > 0:
+                    record.append((c.bytes * sc, c.flops * sc, c.wire * sc,
+                                   ins.op, ins.name, ins.shape[:80]))
+            total += c
+        memo[name] = total
+        return total
+
+    def _instr_cost(ins: _Instr, symtab: Dict[str, str], depth: int) -> HloCost:
+        op = ins.op
+        if op in _ZERO_OPS:
+            return HloCost()
+        out_b = _shape_bytes(ins.shape)
+        in_b = sum(_shape_bytes(symtab.get(o, "")) for o in ins.operands)
+
+        if op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+            mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            body = mb.group(1) if mb else None
+            cond = mc.group(1) if mc else None
+            mt = _TRIP_RE.search(ins.line)
+            if mt:
+                trips = int(mt.group(1))      # XLA's own known_trip_count
+            else:
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+            inner = HloCost()
+            if body:
+                inner += comp_cost(body, depth + 1)
+            if cond:
+                inner += comp_cost(cond, depth + 1)
+            return inner.scaled(trips)
+
+        if op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            inner = comp_cost(m.group(1), depth + 1) if m else HloCost()
+            boundary = out_b + in_b
+            if m:
+                called = m.group(1)
+                # Fused dynamic-slice reads: an operand consumed through a
+                # slice inside the fusion (per-layer weight/cache slices of a
+                # stacked buffer) costs ~the slice, not the whole stack.
+                if any(i.op in ("dynamic-slice", "slice", "gather")
+                       for i in comps.get(called, [])):
+                    boundary = out_b
+                    for o in ins.operands:
+                        ob = _shape_bytes(symtab.get(o, ""))
+                        boundary += out_b if ob > 4 * out_b else ob
+                # In-place loop accumulators: a fusion containing a full-size
+                # dynamic-update-slice aliases its big operand with its output
+                # (scan ys / KV-cache appends) -- real traffic is the updated
+                # slice, not the whole buffer.  Count operands smaller than
+                # the output, twice (read slice + write slice).
+                if _has_full_dus(called, ins.shape):
+                    small = sum(_shape_bytes(symtab.get(o, ""))
+                                for o in ins.operands
+                                if _shape_bytes(symtab.get(o, "")) < 0.5 * out_b)
+                    boundary = 2 * small
+                # Pure dtype-convert fusions: XLA-CPU materializes fp32 copies
+                # around bf16 dots (no native bf16 FMA); TPU fuses converts
+                # into producers/consumers, so they carry no HBM traffic.
+                elif _convert_only(called):
+                    boundary = 0.0
+            return HloCost(inner.flops, boundary, inner.wire,
+                           dict(inner.wire_by_op))
+
+        if op in ("call", "custom-call"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", ins.line)
+            if m:
+                inner = comp_cost(m.group(1), depth + 1)
+                return HloCost(inner.flops, inner.bytes + out_b + in_b,
+                               inner.wire, dict(inner.wire_by_op))
+            return HloCost(0.0, out_b + in_b, 0.0)
+
+        if op == "conditional":
+            branches = _CALL_RE.findall(ins.line)
+            inner = HloCost()
+            for b in branches:
+                c = comp_cost(b, depth + 1)
+                if c.flops + c.bytes > inner.flops + inner.bytes:
+                    inner = c
+            inner = HloCost(inner.flops, inner.bytes + out_b + in_b,
+                            inner.wire, dict(inner.wire_by_op))
+            return inner
+
+        if op in _COLLECTIVES or any(op == c + "-start" for c in _COLLECTIVES):
+            base = op.replace("-start", "")
+            g = _group_size(ins.line)
+            wire = _collective_wire(base, out_b, g)
+            return HloCost(0.0, out_b + in_b, wire, {base: wire})
+
+        if op.endswith("-done"):
+            return HloCost()
+
+        if op == "dot":
+            return HloCost(_dot_flops(ins, symtab), out_b + in_b, 0.0)
+
+        if op == "convolution":
+            # approximate: 2 * out_elems * (in_features * window) -- rare here
+            return HloCost(2.0 * _numel(ins.shape) * 32, out_b + in_b, 0.0)
+
+        if op in ("dynamic-update-slice",):
+            upd = _shape_bytes(symtab.get(ins.operands[1], "")) if len(
+                ins.operands) > 1 else out_b
+            return HloCost(0.0, 2 * upd, 0.0)
+        if op in ("dynamic-slice", "slice"):
+            return HloCost(0.0, 2 * out_b, 0.0)
+        if op in ("gather",):
+            return HloCost(0.0, 2 * out_b, 0.0)
+        if op in ("scatter",):
+            return HloCost(_numel(ins.shape), 2 * in_b, 0.0)
+        if op in ("copy", "copy-start"):
+            # Layout-preserving copies of loop carries are aliasing-elided on
+            # TPU (CPU HLO inserts them for copy-insertion correctness only);
+            # layout-*changing* copies are physical transposes.
+            if ins.operands:
+                src = symtab.get(ins.operands[0], "")
+                if src == ins.shape:
+                    return HloCost()
+            return HloCost(0.0, out_b + in_b, 0.0)
+        if op in ("transpose", "broadcast", "iota",
+                  "rng-bit-generator", "pad", "concatenate", "reverse"):
+            return HloCost(0.0, out_b + in_b, 0.0)
+        if op in ("copy-done",):
+            return HloCost()
+        if op in ("reduce", "reduce-window", "sort", "cholesky",
+                  "triangular-solve"):
+            return HloCost(max(in_b / 4.0, _numel(ins.shape)), out_b + in_b, 0.0)
+
+        if op == "convert":
+            # Standalone dtype casts: fused (free) on TPU -- XLA-CPU inserts
+            # them around bf16 dots because it lacks native bf16 FMAs.
+            return HloCost()
+
+        # default elementwise
+        return HloCost(_numel(ins.shape), out_b + in_b, 0.0)
+
+    return comp_cost(entry)

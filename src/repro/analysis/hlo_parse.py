@@ -1,0 +1,101 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+cost_analysis() does not expose collective traffic, so we parse the optimized
+HLO: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction, with its output shape(s) and replica group
+size, converted to *per-device wire bytes* under ring-algorithm assumptions:
+
+    all-gather        G (g-1)/g        G = gathered (output) bytes
+    reduce-scatter    G (g-1)/g        G = unreduced (g x output) bytes
+    all-reduce        2 G (g-1)/g      (reduce-scatter + all-gather)
+    all-to-all        G (g-1)/g        G = output bytes
+    collective-permute  G              one send
+
+The compiled module is the per-device SPMD program, so the sum is already
+per-device; the roofline collective term divides by one ICI link bandwidth
+(the bottleneck-link serialization assumption, DESIGN.md section 8).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["parse_collectives", "collective_wire_bytes", "count_op"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """One record per collective instruction (``-done`` halves skipped)."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done" in line.split("=")[-1][:60]:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        bytes_out = _shape_bytes(m.group("out"))
+        g = max(_group_size(line), 1)
+        if op == "all-gather":
+            wire = bytes_out * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = bytes_out * (g - 1)          # G = g * output
+        elif op == "all-reduce":
+            wire = 2 * bytes_out * (g - 1) / g
+        elif op == "all-to-all":
+            wire = bytes_out * (g - 1) / g
+        else:  # collective-permute
+            wire = bytes_out
+        out.append({"op": op, "bytes": bytes_out, "group": g, "wire": wire})
+    return out
+
+
+def collective_wire_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """(total per-device wire bytes, per-op-type breakdown)."""
+    recs = parse_collectives(hlo_text)
+    by_op: Dict[str, float] = {}
+    for r in recs:
+        by_op[r["op"]] = by_op.get(r["op"], 0.0) + r["wire"]
+    return sum(by_op.values()), by_op
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len([l for l in hlo_text.splitlines()
+                if re.search(rf"=\s*[^=]*\b{re.escape(opname)}\(", l)])

@@ -1,0 +1,114 @@
+"""Generate the EXPERIMENTS.md dry-run/roofline tables from the per-cell
+JSONs written by launch/dryrun.py.
+
+    PYTHONPATH=src python -m repro.analysis.report            # print tables
+    PYTHONPATH=src python -m repro.analysis.report --write    # update EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                              "EXPERIMENTS.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "mvm_65536"]
+ARCH_ORDER = ["rwkv6-1.6b", "zamba2-1.2b", "whisper-tiny", "yi-9b",
+              "qwen3-1.7b", "nemotron-4-15b", "qwen3-8b", "mixtral-8x7b",
+              "phi3.5-moe-42b-a6.6b", "llama-3.2-vision-11b", "meliso-mvm"]
+
+
+def load(tag_filter=None) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        with open(path) as f:
+            r = json.load(f)
+        r["_id"] = base
+        r["_tag"] = "v0" if "_v0-" in base else ("rram" if base.endswith("_rram")
+                                                 else "")
+        recs.append(r)
+    return recs
+
+
+def _key(r):
+    a = ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99
+    s = SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 99
+    return (a, s, len(r["mesh"]))
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| cell | mesh | kind | fits HBM | peak GiB/dev | compile s | "
+            "collectives (wire B/dev) |",
+            "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        if r["_tag"]:
+            continue
+        mesh = "x".join(str(m) for m in r["mesh"])
+        coll = r.get("collective_by_op", {})
+        coll_s = " ".join(f"{k.replace('collective-','')}:{v:.2e}"
+                          for k, v in sorted(coll.items())) or "-"
+        mem = r["memory"]
+        peak = mem.get("peak_bytes_tpu", mem["peak_bytes"])
+        note = ("*" if mem.get("cpu_bf16_artifact_bytes", 0) > 1e9 else "")
+        rows.append(
+            f"| {r['arch']} x {r['shape']} | {mesh} | {r['kind']} | "
+            f"{'yes' if mem['fits_hbm'] else 'NO'} | "
+            f"{peak/2**30:.2f}{note} | {r.get('compile_s', 0):.1f} | "
+            f"{coll_s} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, multi_pod=False) -> str:
+    rows = ["| cell | compute s | memory s | collective s | dominant | "
+            "MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|"]
+    want = 3 if multi_pod else 2
+    for r in sorted(recs, key=_key):
+        if r["_tag"] or len(r["mesh"]) != want:
+            continue
+        rows.append(
+            f"| {r['arch']} x {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r.get('useful_ratio', 0):.3f} | "
+            f"{r.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(rows)
+
+
+def splice(md: str, marker: str, table: str) -> str:
+    begin, end = f"<!-- BEGIN {marker} -->", f"<!-- END {marker} -->"
+    pattern = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.S)
+    return pattern.sub(begin + "\n" + table + "\n" + end, md)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    recs = load()
+    t_dry = dryrun_table(recs)
+    t_roof = roofline_table(recs, multi_pod=False)
+    t_roof_mp = roofline_table(recs, multi_pod=True)
+    if args.write:
+        with open(EXPERIMENTS_MD) as f:
+            md = f.read()
+        md = splice(md, "DRYRUN_TABLE", t_dry)
+        md = splice(md, "ROOFLINE_TABLE", t_roof)
+        md = splice(md, "ROOFLINE_TABLE_MULTIPOD", t_roof_mp)
+        with open(EXPERIMENTS_MD, "w") as f:
+            f.write(md)
+        print(f"updated {EXPERIMENTS_MD} with {len(recs)} cells")
+    else:
+        print("## Dry-run\n" + t_dry)
+        print("\n## Roofline (single-pod)\n" + t_roof)
+        print("\n## Roofline (multi-pod)\n" + t_roof_mp)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .base import (SHAPES, ArchConfig, MeshConfig, ModelConfig,
+                   RRAMBackendConfig, ShapeConfig, TrainConfig)
+from .registry import ARCHS, get_arch, input_specs, model_module
+
+__all__ = ["SHAPES", "ArchConfig", "MeshConfig", "ModelConfig",
+           "RRAMBackendConfig", "ShapeConfig", "TrainConfig", "ARCHS",
+           "get_arch", "input_specs", "model_module"]

@@ -1,0 +1,121 @@
+"""--arch registry: id -> ArchConfig + family module + input specs.
+
+``input_specs(arch, shape, reduced=False)`` builds the exact ShapeDtypeStruct
+stand-ins the dry-run lowers against (weak-type-correct, shardable, zero
+allocation), including abstract decode caches via ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import SHAPES, ArchConfig, ModelConfig, ShapeConfig
+
+__all__ = ["ARCHS", "get_arch", "model_module", "input_specs", "batch_specs",
+           "decode_cache_len"]
+
+_MODULES = {
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "whisper-tiny": "whisper_tiny",
+    "yi-9b": "yi_9b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen3-8b": "qwen3_8b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "meliso-mvm": "meliso_mvm",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "meliso-mvm")
+
+_FAMILY_MODULES = {
+    "transformer": "repro.models.transformer",
+    "moe": "repro.models.moe",
+    "rwkv6": "repro.models.rwkv6",
+    "zamba2": "repro.models.zamba2",
+    "whisper": "repro.models.whisper",
+    "llama_vision": "repro.models.llama_vision",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.ARCH
+
+
+def model_module(cfg: ModelConfig):
+    return importlib.import_module(_FAMILY_MODULES[cfg.family])
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV budget for decode shapes: SWA archs keep a rolling window."""
+    if cfg.swa_window:
+        return min(shape.seq_len, cfg.swa_window)
+    return shape.seq_len
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig,
+                reduced: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Train/prefill batch stand-ins for one step."""
+    m = arch.reduced() if reduced else arch.model
+    b, s = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(m.compute_dtype)
+    i32 = jnp.int32
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if m.family == "whisper":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, m.d_model), cd)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif m.family == "llama_vision":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["patches"] = jax.ShapeDtypeStruct((b, m.n_patches, m.d_model), cd)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return specs
+
+
+def decode_cache_specs(arch: ArchConfig, shape: ShapeConfig,
+                       reduced: bool = False):
+    """Abstract decode caches (filled KV / SSM state of length seq_len)."""
+    m = arch.reduced() if reduced else arch.model
+    mod = model_module(m)
+    b = shape.global_batch
+    max_len = decode_cache_len(m, shape)
+
+    if m.family in ("transformer", "moe"):
+        fn = lambda: mod.init_caches(b, max_len, m)
+    elif m.family == "rwkv6":
+        fn = lambda: mod.init_caches(b, m)
+    elif m.family == "zamba2":
+        fn = lambda: mod.init_caches(b, max_len, m)
+    elif m.family == "whisper":
+        cd = jnp.dtype(m.compute_dtype)
+        fn = lambda: {"kv": mod.init_caches(b, max_len, m),
+                      "enc": jnp.zeros((b, shape.seq_len, m.d_model), cd)}
+    elif m.family == "llama_vision":
+        cd = jnp.dtype(m.compute_dtype)
+        fn = lambda: {"kv": mod.init_caches(b, max_len, m),
+                      "patches": jnp.zeros((b, m.n_patches, m.d_model), cd)}
+    else:
+        raise ValueError(m.family)
+    return jax.eval_shape(fn)
+
+
+def input_specs(arch: ArchConfig, shape_name: str, reduced: bool = False):
+    """Everything the (train|prefill|decode) step takes, as ShapeDtypeStructs."""
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(arch, shape, reduced)}
+    # decode: one new token + filled caches
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return {"tokens": tokens,
+            "caches": decode_cache_specs(arch, shape, reduced)}

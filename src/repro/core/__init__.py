@@ -1,0 +1,38 @@
+"""MELISO+ core: RRAM device models, write-verify, two-tier error correction,
+virtualized multi-MCA crossbar simulation, and the distributed MVM engine."""
+
+from .devices import DEVICES, DeviceModel, effective_sigma, encode, get_device, quantize
+from .write_verify import (
+    WriteStats,
+    adjustable_mat_write_and_verify,
+    adjustable_vec_write_and_verify,
+    adjustable_write_and_verify,
+)
+from .error_correction import (
+    build_l_matrix,
+    corrected_matmul,
+    corrected_matvecmul,
+    denoise_least_square,
+    first_order_correct,
+    tridiag_coeffs,
+)
+from .virtualization import (
+    MCAGeometry,
+    block_partition,
+    generate_mat_chunks,
+    generate_vec_chunks,
+    reassemble,
+    reassignment_count,
+    zero_padding,
+)
+from .crossbar import (
+    CrossbarConfig,
+    corrected_mvm,
+    encode_tiled,
+    streamed_corrected_mvm,
+    write_cost,
+)
+from .distributed import distributed_corrected_mvm, shard_matrix
+from .metrics import rel_l2, rel_linf, relative_error
+
+__all__ = [n for n in dir() if not n.startswith("_")]

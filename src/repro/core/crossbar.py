@@ -1,0 +1,237 @@
+"""Multi-MCA crossbar simulation engine (reference, pure-jnp).
+
+Combines the device models, write-verify encoding, virtualization and the
+two-tier error correction into the paper's ``correctedMatVecMul`` /
+``distributedMatVecMul`` dataflow, with analytic write-energy / write-latency
+accounting that follows the paper's conventions:
+
+  * energy  = every programmed cell costs ``e_write`` per pass (zero padding is
+              programmed too, faithfully -- ``skip_zero_pad_writes`` turns on the
+              beyond-paper optimization of eliding all-zero chunk writes);
+  * latency = rows of one MCA are programmed sequentially, MCAs operate in
+              parallel, reassignments (virtualization) serialize; the paper
+              reports the *mean across MCAs* (Figs. 4-5), which for a uniform
+              workload equals the per-MCA value;
+  * passes  = k_iters + 1 write-verify passes (the paper sweeps fixed k);
+  * EC      = one extra array write (the replicated X^T matrix, paper sec. 2)
+              per assignment plus the input-vector write.
+
+The Pallas kernel in :mod:`repro.kernels.rram_mvm` implements the same
+encode+multiply semantics per (cell_rows x cell_cols) VMEM tile; this module is
+its oracle at system level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .devices import DeviceModel, effective_sigma, effective_sigma_py, quantize
+from .error_correction import denoise_least_square, first_order_correct
+from .virtualization import MCAGeometry, reassignment_count, zero_padding
+from .write_verify import WriteStats
+
+__all__ = [
+    "CrossbarConfig",
+    "encode_tiled",
+    "write_cost",
+    "corrected_mvm",
+    "streamed_corrected_mvm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    """Everything needed to run one corrected MVM on a multi-MCA system."""
+
+    device: DeviceModel
+    geom: MCAGeometry = MCAGeometry()
+    k_iters: int = 5                    # fixed write-verify iterations (paper Fig. 2-3)
+    ec: bool = True                     # two-tier error correction on/off
+    ec_mode: str = "fused"              # "faithful" (3 products) | "fused" (2)
+    denoise_method: str = "neumann"     # "dense" | "thomas" | "neumann"
+    lam: float = 1e-12
+    h: float = -1.0
+    encode_inputs: bool = True          # inputs (x) also pass through the DAC/encode
+    skip_zero_pad_writes: bool = False  # beyond-paper: don't program all-zero chunks
+
+
+# --------------------------------------------------------------------------- #
+# Encoding
+# --------------------------------------------------------------------------- #
+
+def encode_tiled(
+    a: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+) -> jnp.ndarray:
+    """Encode a (padded) matrix with *per-MCA-tile* quantization scales.
+
+    ``a`` is (M, N) with M, N multiples of the cell size; each (r x c) tile gets
+    its own conductance range (per-array DAC scaling), quantization to the
+    device's levels and residual programming noise after ``k_iters`` verify
+    passes.
+    """
+    dev, geom = cfg.device, cfg.geom
+    r_, c_ = geom.cell_rows, geom.cell_cols
+    m, n = a.shape
+    assert m % r_ == 0 and n % c_ == 0, (a.shape, (r_, c_))
+    # Per-tile quantization without physical transposes: the (mt, r, nt, c)
+    # view is a pure reshape, the per-tile scale reduces axes (1, 3) in place
+    # (two whole-matrix transposes removed -- EXPERIMENTS.md Perf M1).
+    tiles = a.reshape(m // r_, r_, n // c_, c_)
+    q = quantize(tiles, dev.levels, axis=(1, 3))
+    sigma = effective_sigma(dev, cfg.k_iters).astype(a.dtype)
+    eta = jax.random.normal(key, tiles.shape, dtype=a.dtype)
+    enc = q * (1.0 + sigma * eta)
+    return enc.reshape(m, n)
+
+
+def _encode_vec(x: jnp.ndarray, key: jax.Array, cfg: CrossbarConfig) -> jnp.ndarray:
+    dev = cfg.device
+    q = quantize(x, dev.levels, axis=None)
+    sigma = effective_sigma(dev, cfg.k_iters).astype(x.dtype)
+    eta = jax.random.normal(key, x.shape, dtype=x.dtype)
+    return q * (1.0 + sigma * eta)
+
+
+# --------------------------------------------------------------------------- #
+# Analytic write cost (paper Figs. 2-5 accounting)
+# --------------------------------------------------------------------------- #
+
+def write_cost(m: int, n: int, cfg: CrossbarConfig, batch: int = 1) -> WriteStats:
+    """Analytic write energy/latency for one corrected MVM of an (m, n) problem."""
+    dev, geom = cfg.device, cfg.geom
+    cap_m, cap_n = geom.capacity
+    mb = -(-m // cap_m)
+    nb = -(-n // cap_n)
+    reass = mb * nb
+    passes = float(cfg.k_iters + 1)
+
+    if cfg.skip_zero_pad_writes:
+        # Only the cells covering the true (m, n) footprint are programmed.
+        cells_a = float(m) * float(n)
+        rows_a_per_mca = reass * min(geom.cell_rows, max(1, m))
+    else:
+        cells_a = float(mb * cap_m) * float(nb * cap_n)
+        rows_a_per_mca = reass * geom.cell_rows
+
+    c_ = geom.cell_cols
+    n_pad = nb * cap_n
+    energy = cells_a * dev.e_write
+    latency = rows_a_per_mca * dev.t_write
+    if cfg.encode_inputs:
+        energy += float(n_pad) * batch * dev.e_write        # x vector write
+        latency += 1.0 * batch * dev.t_write
+    if cfg.ec:
+        # The replicated X^T array (c x c per MCA assignment, paper sec. 2).
+        energy += float(reass * geom.n_mcas) * (c_ * c_) * batch * dev.e_write
+        latency += reass * c_ * batch * dev.t_write
+    # Pure-Python math throughout: this function is called inside shard_map
+    # traces, where any jnp op would produce (un-float-able) tracers.
+    return WriteStats(
+        energy_j=jnp.float32(energy * passes),
+        latency_s=jnp.float32(latency * passes),
+        iterations=jnp.int32(cfg.k_iters),
+        final_delta=jnp.float32(effective_sigma_py(dev, cfg.k_iters)),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Corrected MVM (reference engine)
+# --------------------------------------------------------------------------- #
+
+def _block_mvm(a_blk, x_blk, key, cfg: CrossbarConfig):
+    """One capacity-sized block: encode (per-tile) + tier-1 EC product."""
+    k_a, k_x = jax.random.split(key)
+    a_t = encode_tiled(a_blk, k_a, cfg)
+    if cfg.encode_inputs:
+        x_t = _encode_vec(x_blk, k_x, cfg)
+    else:
+        x_t = x_blk
+    if cfg.ec:
+        return first_order_correct(a_blk, a_t, x_blk, x_t, mode=cfg.ec_mode)
+    return a_t @ x_t
+
+
+def corrected_mvm(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+) -> Tuple[jnp.ndarray, WriteStats]:
+    """y ~= A @ x on the simulated multi-MCA system (paper Algorithm 6 + 4).
+
+    ``x`` may be (n,) or (n, batch).  The matrix is padded, block-partitioned to
+    the system capacity, each block is encoded with per-MCA scales and multiplied
+    with tier-1 EC; column-block partials are summed; tier-2 denoising runs on
+    the assembled local output (``denoise_scope=local`` in paper terms).
+    """
+    m, n = a.shape
+    squeeze = x.ndim == 1
+    xb = x[:, None] if squeeze else x
+    batch = xb.shape[1]
+
+    cap_m, cap_n = cfg.geom.capacity
+    a_pad = zero_padding(a, cfg.geom)
+    mp, np_ = a_pad.shape
+    x_pad = jnp.pad(xb, ((0, np_ - n), (0, 0)))
+    mb, nb = mp // cap_m, np_ // cap_n
+
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+    x_chunks = x_pad.reshape(nb, cap_n, batch)
+    keys = jax.random.split(key, mb * nb)
+    keys = keys.reshape((mb, nb) + keys.shape[1:])   # typed or raw key format
+
+    def per_row(i_blocks, i_keys):
+        def per_col(a_blk, x_blk, k):
+            return _block_mvm(a_blk, x_blk, k, cfg)
+        partials = jax.vmap(per_col)(i_blocks, x_chunks, i_keys)
+        return jnp.sum(partials, axis=0)                     # sum over column blocks
+
+    y_blocks = jax.vmap(per_row)(blocks, keys)               # (mb, cap_m, batch)
+    p = y_blocks.reshape(mb * cap_m, batch)[:m]
+    if cfg.ec:
+        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+    stats = write_cost(m, n, cfg, batch=1)
+    return (p[:, 0] if squeeze else p), stats
+
+
+def streamed_corrected_mvm(
+    block_fn: Callable[[int, int], jnp.ndarray],
+    x: jnp.ndarray,
+    m: int,
+    n: int,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+) -> Tuple[jnp.ndarray, WriteStats]:
+    """Large-problem variant: ``A`` is produced block-by-block by ``block_fn(i, j)``
+    (each block capacity-sized, already padded), so matrices such as the paper's
+    65,025 x 65,025 case never materialize.  Python loop over blocks; the inner
+    step is jitted once and reused.
+    """
+    cap_m, cap_n = cfg.geom.capacity
+    mb = -(-m // cap_m)
+    nb = -(-n // cap_n)
+    squeeze = x.ndim == 1
+    xb = x[:, None] if squeeze else x
+    batch = xb.shape[1]
+    x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
+    x_chunks = x_pad.reshape(nb, cap_n, batch)
+
+    step = jax.jit(lambda a_blk, x_blk, k: _block_mvm(a_blk, x_blk, k, cfg))
+    rows = []
+    for i in range(mb):
+        acc = jnp.zeros((cap_m, batch), jnp.float32)
+        for j in range(nb):
+            kij = jax.random.fold_in(jax.random.fold_in(key, i), j)
+            acc = acc + step(block_fn(i, j), x_chunks[j], kij)
+        rows.append(acc)
+    p = jnp.concatenate(rows, axis=0)[:m]
+    if cfg.ec:
+        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+    stats = write_cost(m, n, cfg, batch=1)
+    return (p[:, 0] if squeeze else p), stats

@@ -1,0 +1,142 @@
+"""RRAM device models for the MELISO+ simulation.
+
+Four material systems from the paper (Table 1 / Fig. 2-3):
+
+  - EpiRAM        [Choi et al., Nat. Mater. 2018]  -- high precision, high energy
+  - Ag-aSi        [Jo et al., Nano Lett. 2010]     -- strong nonlinearity, slow verify
+  - AlOx-HfO2     [Woo et al., EDL 2016]           -- noisy, mid energy
+  - TaOx-HfOx     [Wu et al., VLSI 2018]           -- noisy but very fast & low energy
+
+Each device is a small frozen dataclass of *effective* constants calibrated so the
+single-pass (k=0) write of a 66x66 array reproduces the orders of magnitude of the
+paper's Table 1 (see DESIGN.md section 7 for the calibration table and targets).
+
+The programming model: writing a value ``w`` yields
+
+    w_tilde = Q(w) * (1 + sigma_k * eta),      eta ~ N(0, 1)
+
+where ``Q`` is per-tile symmetric quantization to ``levels`` conductance states and
+
+    sigma_k = max(sigma_floor, sigma0 * (1 - effective_gain)**k)
+
+models ``k`` closed-loop adjustableWriteandVerify iterations.  The effective gain is
+reduced by the device's potentiation/depression nonlinearity (Ag-aSi's 2.4/-4.88
+makes its verify loop converge ~4x slower, reproducing the paper's k~11 plateau
+versus k~2 for the other materials).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DeviceModel",
+    "DEVICES",
+    "get_device",
+    "effective_sigma",
+    "quantize",
+    "encode",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Effective per-material constants (see DESIGN.md section 7)."""
+
+    name: str
+    levels: int            # conductance states available for weight storage
+    sigma0: float          # initial relative programming noise (std, multiplicative)
+    verify_gain: float     # fraction of residual error removed per verify iteration
+    e_write: float         # J per cell per programming pulse
+    t_write: float         # s per row programming pulse (rows in a column are parallel)
+    nl_pot: float          # potentiation nonlinearity coefficient
+    nl_dep: float          # depression nonlinearity coefficient
+
+    @property
+    def sigma_floor(self) -> float:
+        # Quantization-limited noise floor: uniform quantization error std of a
+        # symmetric `levels`-state cell, ~ 1/(levels * sqrt(12)) relative.
+        return 1.0 / (self.levels * (12.0 ** 0.5))
+
+    @property
+    def effective_gain(self) -> float:
+        # Nonlinearity shrinks the usable verify correction per iteration: the
+        # write pulse over/undershoots in proportion to |nl|.
+        nl = 0.5 * (abs(self.nl_pot) + abs(self.nl_dep))
+        return self.verify_gain / (1.0 + 0.35 * nl)
+
+
+DEVICES: Dict[str, DeviceModel] = {
+    "epiram": DeviceModel(
+        name="epiram", levels=64, sigma0=0.022, verify_gain=0.50,
+        e_write=2.3e-8, t_write=6.8e-4, nl_pot=0.5, nl_dep=-0.5,
+    ),
+    "ag-si": DeviceModel(
+        name="ag-si", levels=16, sigma0=0.23, verify_gain=0.60,
+        e_write=8.6e-10, t_write=1.5e-2, nl_pot=2.4, nl_dep=-4.88,
+    ),
+    "alox-hfo2": DeviceModel(
+        name="alox-hfo2", levels=8, sigma0=0.60, verify_gain=0.60,
+        e_write=1.3e-8, t_write=2.1e-3, nl_pot=1.0, nl_dep=-1.0,
+    ),
+    "taox-hfox": DeviceModel(
+        name="taox-hfox", levels=8, sigma0=0.49, verify_gain=0.60,
+        e_write=1.2e-11, t_write=3.1e-6, nl_pot=0.8, nl_dep=-0.8,
+    ),
+}
+
+
+def get_device(name: str) -> DeviceModel:
+    key = name.lower().replace("_", "-")
+    if key not in DEVICES:
+        raise KeyError(f"unknown RRAM device {name!r}; known: {sorted(DEVICES)}")
+    return DEVICES[key]
+
+
+def effective_sigma(device: DeviceModel, k: jnp.ndarray | int) -> jnp.ndarray:
+    """Residual relative programming noise after ``k`` write-verify iterations."""
+    k = jnp.asarray(k, jnp.float32)
+    sigma = device.sigma0 * (1.0 - device.effective_gain) ** k
+    return jnp.maximum(sigma, device.sigma_floor)
+
+
+def effective_sigma_py(device: DeviceModel, k: float) -> float:
+    """Pure-Python twin of :func:`effective_sigma` (safe inside traced code)."""
+    return max(device.sigma0 * (1.0 - device.effective_gain) ** float(k),
+               device.sigma_floor)
+
+
+def quantize(w: jnp.ndarray, levels: int, axis=None) -> jnp.ndarray:
+    """Symmetric quantization to ``levels`` conductance states.
+
+    The scale is the max-abs over ``axis`` (the physical tile), mirroring the
+    per-array DAC/conductance range of one MCA.  ``levels`` counts states on each
+    polarity of the differential pair, so the grid is ``[-1, 1] * scale`` with
+    ``levels`` bins per side.
+    """
+    scale = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.round(w / scale * (levels - 1)) / (levels - 1)
+    return q * scale
+
+
+def encode(
+    w: jnp.ndarray,
+    key: jax.Array,
+    device: DeviceModel,
+    k_iters: jnp.ndarray | int = 0,
+    quantize_axis=None,
+) -> jnp.ndarray:
+    """Closed-form encode: quantize + residual programming noise after k iters.
+
+    This is the fast path used by the LM ``rram`` backend; the faithful iterative
+    loop (Algorithms 1-2 of the paper) lives in :mod:`repro.core.write_verify` and
+    converges to the same residual noise model.
+    """
+    sigma = effective_sigma(device, k_iters).astype(w.dtype)
+    q = quantize(w, device.levels, axis=quantize_axis)
+    eta = jax.random.normal(key, w.shape, dtype=w.dtype)
+    return q * (1.0 + sigma * eta)

@@ -1,0 +1,102 @@
+"""Distributed corrected MVM over a JAX device mesh (paper Algorithm 4).
+
+The paper distributes chunk pairs to MPI ranks; here each mesh device owns a
+2-D block of the global matrix (rows over ``row_axis``, contraction columns
+over ``col_axis``) and the set of MCA tiles that block maps onto.  Local
+corrected MVMs produce tier-1 partials that are aggregated with ``psum`` over
+the contraction axis -- the TPU-native image of the paper's MPI reduce -- and
+tier-2 denoising then runs on-node on each device's output segment (the
+paper's "on-node error correction").  The row partition stays sharded: the
+output is produced already distributed, no gather required.
+
+Cost statistics follow the paper's Figs. 4-5 convention: energy/latency are
+reported as the mean across MCAs (mean across devices here).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .crossbar import CrossbarConfig, corrected_mvm
+from .error_correction import denoise_least_square
+from .write_verify import WriteStats
+
+__all__ = ["distributed_corrected_mvm", "shard_matrix"]
+
+
+def shard_matrix(a: jnp.ndarray, mesh: Mesh, row_axis: str, col_axis: str):
+    """Place a global (m, n) matrix block-sharded over (row_axis, col_axis)."""
+    return jax.device_put(a, NamedSharding(mesh, P(row_axis, col_axis)))
+
+
+def _tier1_only(cfg: CrossbarConfig) -> CrossbarConfig:
+    """Disable the local tier-2 denoise (lam=0 makes Neumann the identity)."""
+    d = dict(cfg.__dict__)
+    d["lam"] = 0.0
+    d["denoise_method"] = "neumann"
+    return CrossbarConfig(**d)
+
+
+def make_distributed_mvm(
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+):
+    """Build the shard_map'd corrected-MVM callable (unjitted, lowerable).
+
+    Signature of the returned fn: (a (m, n), x (n, batch), key) ->
+    (y (m, batch) row-sharded, WriteStats).  ``row_axes`` may name several
+    mesh axes (e.g. ("pod", "data")) for the row partition.
+    """
+    tier1_cfg = _tier1_only(cfg)
+
+    def local_fn(a_blk, x_blk, k):
+        # Per-device key: decorrelate programming noise across ranks.
+        for ax in row_axes + (col_axis,):
+            k = jax.random.fold_in(k, jax.lax.axis_index(ax))
+        p_local, stats = corrected_mvm(a_blk, x_blk, k, tier1_cfg)
+        p_local = jax.lax.psum(p_local, axis_name=col_axis)
+        if cfg.ec:
+            p_local = denoise_least_square(
+                p_local, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+        n_ranks = jax.lax.psum(1, axis_name=row_axes + (col_axis,))
+        e = jax.lax.psum(stats.energy_j, row_axes + (col_axis,)) / n_ranks
+        t = jax.lax.psum(stats.latency_s, row_axes + (col_axis,)) / n_ranks
+        stats = WriteStats(energy_j=e, latency_s=t,
+                           iterations=stats.iterations,
+                           final_delta=stats.final_delta)
+        return p_local, stats
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(row_spec, col_axis), P(col_axis, None), P()),
+        out_specs=(P(row_spec, None), P()),
+    )
+
+
+def distributed_corrected_mvm(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axis: str = "data",
+    col_axis: str = "model",
+) -> Tuple[jnp.ndarray, WriteStats]:
+    """y = A @ x with per-device multi-MCA simulation and two-tier EC.
+
+    ``a``: global (m, n), m divisible by mesh[row_axis], n by mesh[col_axis].
+    ``x``: (n,) or (n, batch).  Output is (m,) / (m, batch), sharded over rows.
+    """
+    squeeze = x.ndim == 1
+    xb = x[:, None] if squeeze else x
+    fn = make_distributed_mvm(cfg, mesh, (row_axis,), col_axis)
+    y, stats = jax.jit(fn)(a, xb, key)
+    return (y[:, 0] if squeeze else y), stats

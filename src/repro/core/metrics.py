@@ -1,0 +1,27 @@
+"""Evaluation metrics (paper section 2.1) and cost aggregation helpers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["relative_error", "rel_l2", "rel_linf"]
+
+
+def relative_error(y: jnp.ndarray, b: jnp.ndarray, p=2) -> jnp.ndarray:
+    """epsilon_total = ||y - b||_p / ||b||_p, p in {2, inf} (paper Eq. in 2.1)."""
+    y = y.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if p == jnp.inf or p == "inf":
+        num = jnp.max(jnp.abs(y - b))
+        den = jnp.max(jnp.abs(b))
+    else:
+        num = jnp.linalg.norm((y - b).reshape(-1))
+        den = jnp.linalg.norm(b.reshape(-1))
+    return num / jnp.maximum(den, jnp.finfo(jnp.float32).tiny)
+
+
+def rel_l2(y, b):
+    return relative_error(y, b, p=2)
+
+
+def rel_linf(y, b):
+    return relative_error(y, b, p=jnp.inf)

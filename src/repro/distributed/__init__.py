@@ -1,0 +1,4 @@
+from .sharding import (batch_pspec, cache_pspecs, data_axes, param_pspecs,
+                       param_shardings)
+from .collectives import compressed_psum, int8_quantize, ring_collective_matmul
+from .fault_tolerance import CheckpointManager, Watchdog

@@ -1,0 +1,169 @@
+"""Fault tolerance: async atomic checkpointing with elastic (mesh-changing)
+restore, preemption handling, and a straggler watchdog.
+
+Checkpoint layout (one directory per step, atomically renamed into place):
+
+    <dir>/step_000120/
+        manifest.json        # step, mesh shape/axes, leaf paths/shapes/dtypes
+        arrays.npz           # one entry per pytree leaf (path-keyed)
+
+Restore targets *any* mesh: arrays are loaded on host and device_put with the
+target NamedShardings, so a job checkpointed on (16, 16) restarts cleanly on
+(8, 16) or (2, 16, 16) -- elastic scaling.  Saves run on a background thread
+(snapshot is taken synchronously via device_get, I/O is async); ``wait()``
+joins before the next save or shutdown.  A SIGTERM handler flips
+``preempted`` so the training loop can checkpoint-and-exit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager", "Watchdog", "install_preemption_handler",
+           "PREEMPTED"]
+
+PREEMPTED = threading.Event()
+
+
+def install_preemption_handler() -> None:
+    """SIGTERM -> graceful checkpoint-and-exit flag (cluster preemption)."""
+    def handler(signum, frame):
+        PREEMPTED.set()
+    try:
+        signal.signal(signal.SIGTERM, handler)
+    except ValueError:
+        pass  # not in main thread (tests)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): np.asarray(jax.device_get(v))
+            for p, v in flat}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             extra: Optional[Dict] = None) -> None:
+        self.wait()
+        arrays = _flatten(tree)          # snapshot now (synchronous device_get)
+        manifest = {
+            "step": int(step),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in arrays.items()},
+            "extra": extra or {},
+            "devices": jax.device_count(),
+            "time": time.time(),
+        }
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)        # atomic publish
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Rebuild ``target_tree``-structured state from disk.  ``shardings``
+        (same structure, NamedShardings) retargets any mesh -- elastic."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+            out = []
+            for p, leaf in flat:
+                key = jax.tree_util.keystr(p)
+                arr = data[key]
+                want = jnp.dtype(leaf.dtype)
+                arr = arr.astype(want)
+                out.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return tree
+
+
+@dataclasses.dataclass
+class Watchdog:
+    """Step-time EMA straggler detector: flags steps slower than
+    ``threshold`` x the running median and can trigger a callback (e.g.
+    checkpoint + reconfigure) after ``patience`` consecutive slow steps."""
+
+    threshold: float = 2.5
+    patience: int = 3
+    on_straggler: Optional[Callable[[int], None]] = None
+    _times: List[float] = dataclasses.field(default_factory=list)
+    _slow: int = 0
+    events: List[int] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        self._times.append(seconds)
+        hist = sorted(self._times[-50:])
+        med = hist[len(hist) // 2]
+        if len(self._times) >= 5 and seconds > self.threshold * med:
+            self._slow += 1
+            self.events.append(step)
+            if self._slow >= self.patience and self.on_straggler:
+                self.on_straggler(step)
+                self._slow = 0
+            return True
+        self._slow = 0
+        return False

@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules (MaxText-style, divisibility-aware).
+
+Rule tables map logical axis names (see models/params.py) to an ordered list
+of candidate mesh axes; the resolver shards a tensor dim on the first
+candidate whose size divides the dim and which is not already used by another
+dim of the same tensor -- otherwise the dim is replicated.  This is what makes
+kv_heads=4 work on a model=16 mesh (the fused kv*head_dim weight dims stay
+divisible; the separate-dim KV caches fall through to head_dim or replicate).
+
+Two parameter rule sets:
+  * TP       -- inference: weights resident, sharded over `model` only.
+  * FSDP_TP  -- training: weights/optimizer state additionally sharded over
+                `data` (+`pod`) on the embed dim (ZeRO-ish; GSPMD inserts the
+                per-layer all-gathers, which overlap with compute).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import is_spec, logical_axes
+
+__all__ = [
+    "param_rules", "resolve_pspec", "param_pspecs", "param_shardings",
+    "batch_pspec", "cache_pspecs", "mesh_axis_sizes", "data_axes",
+]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def param_rules(mode: str, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    da = data_axes(mesh)
+    # one *combined* candidate (("pod","data"),) -- not two alternatives --
+    # so multi-pod FSDP shards 32-way, falling back to "data" alone when the
+    # dim divides only that.
+    fsdp = ((da, da[-1]) if len(da) > 1 else (da[0],)) if mode == "fsdp_tp" else ()
+    return {
+        "vocab": ("model",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "state": (),
+        "expert": (),            # expert compute is TP inside shard_map
+        "embed": fsdp,           # FSDP shards the d_model dim over data(+pod)
+        "head_dim": (),
+        "layer": (),
+        None: (),
+    }
+
+
+def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  rules: Dict, sizes: Dict[str, int]) -> P:
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        cands = rules.get(ax, ())
+        pick = None
+        for c in cands:
+            if isinstance(c, str):
+                c = (c,)
+            total = 1
+            for cc in c:
+                total *= sizes[cc]
+            if all(cc not in used for cc in c) and dim % total == 0 and dim > 0:
+                pick = c
+                break
+        if pick is None:
+            out.append(None)
+        else:
+            used.update(pick)
+            out.append(pick if len(pick) > 1 else pick[0])
+    return P(*out)
+
+
+def param_pspecs(specs, mesh: Mesh, mode: str = "tp"):
+    """Spec tree -> pytree of PartitionSpecs."""
+    rules = param_rules(mode, mesh)
+    sizes = mesh_axis_sizes(mesh)
+    return jax.tree.map(
+        lambda s: resolve_pspec(s.shape, s.axes, rules, sizes),
+        specs, is_leaf=is_spec)
+
+
+def param_shardings(specs, mesh: Mesh, mode: str = "tp"):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                        param_pspecs(specs, mesh, mode))
+
+
+def batch_pspec(leaf_shape: Sequence[int], mesh: Mesh,
+                global_batch: int) -> P:
+    """Batch inputs: the dim equal to global_batch shards over (pod, data)."""
+    da = data_axes(mesh)
+    out = []
+    assigned = False
+    for dim in leaf_shape:
+        if not assigned and dim == global_batch and dim % _prod(mesh, da) == 0:
+            out.append(da if len(da) > 1 else da[0])
+            assigned = True
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _prod(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    r = 1
+    for a in axes:
+        r *= sizes[a]
+    return r
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, global_batch: int):
+    """Decode caches: batch dim -> data axes; then the largest remaining dim
+    divisible by the model-axis size -> model.  Robust across families and
+    per-layer stacking."""
+    da = data_axes(mesh)
+    dsz = _prod(mesh, da)
+    msz = mesh_axis_sizes(mesh).get("model", 1)
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        out: list = [None] * len(shape)
+        used_b = False
+        for i, dim in enumerate(shape):
+            if not used_b and dim == global_batch and dim % dsz == 0:
+                out[i] = da if len(da) > 1 else da[0]
+                used_b = True
+                break
+        # model axis on the largest divisible non-batch dim
+        best, best_dim = None, 0
+        for i, dim in enumerate(shape):
+            if out[i] is None and dim % msz == 0 and dim > best_dim and dim >= msz:
+                best, best_dim = i, dim
+        if best is not None and msz > 1:
+            out[best] = "model"
+        return P(*out)
+
+    return jax.tree.map(leaf_spec, cache_tree)

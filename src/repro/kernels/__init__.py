@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the RRAM crossbar hot spots (validated in
+interpret mode on CPU; see ops.py for the public wrappers)."""
+from .ops import (
+    denoise_stencil,
+    denoise_thomas,
+    on_cpu,
+    rram_ec_matmul,
+    rram_encode_matmul,
+)
+
+__all__ = [
+    "denoise_stencil",
+    "denoise_thomas",
+    "on_cpu",
+    "rram_ec_matmul",
+    "rram_encode_matmul",
+]

@@ -1,0 +1,125 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode -- the
+kernel body runs as traced JAX ops per grid point, validating the exact TPU
+dataflow.  On TPU backends the same calls lower through Mosaic.  The wrappers
+handle padding to block multiples and un-padding, so callers pass natural
+shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as kref
+from .rram_mvm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N
+from .rram_mvm import ec_matmul as _ec_matmul
+from .rram_mvm import encode_matmul as _encode_matmul
+from .tridiag import stencil_denoise as _stencil
+from .tridiag import thomas_solve as _thomas
+
+__all__ = [
+    "on_cpu",
+    "rram_encode_matmul",
+    "rram_ec_matmul",
+    "denoise_thomas",
+    "denoise_stencil",
+]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        pads.append((0, (-dim) % mult))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _pick_blocks(m, k, n, bm, bk, bn):
+    """Shrink default blocks for small problems (keeps interpret tests fast and
+    avoids padding a 66x66 paper matrix to 512^2)."""
+    return min(bm, max(8, m)), min(bk, max(8, k)), min(bn, max(8, n))
+
+
+def rram_encode_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    sigma: float,
+    levels: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """y = x @ encode(w); per-(block_k, block_n) tile = one MCA array."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bk, bn = _pick_blocks(m, k, n, block_m, block_k, block_n)
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    ep = _pad_to(eps, (bk, bn))
+    out = _encode_matmul(
+        xp, wp, ep, sigma=sigma, levels=levels,
+        block_m=bm, block_k=bk, block_n=bn,
+        interpret=on_cpu() if interpret is None else interpret)
+    return out[:m, :n]
+
+
+def rram_ec_matmul(
+    x: jnp.ndarray,
+    x_tilde: jnp.ndarray,
+    w_tilde: jnp.ndarray,
+    dw: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused tier-1 EC matmul p = x @ W_tilde + x_tilde @ dW."""
+    m, k = x.shape
+    _, n = w_tilde.shape
+    bm, bk, bn = _pick_blocks(m, k, n, block_m, block_k, block_n)
+    xp = _pad_to(x, (bm, bk))
+    xtp = _pad_to(x_tilde, (bm, bk))
+    wtp = _pad_to(w_tilde, (bk, bn))
+    dwp = _pad_to(dw, (bk, bn))
+    out = _ec_matmul(
+        xp, xtp, wtp, dwp, block_m=bm, block_k=bk, block_n=bn,
+        interpret=on_cpu() if interpret is None else interpret)
+    return out[:m, :n]
+
+
+def denoise_thomas(
+    p: jnp.ndarray, *, lam: float, h: float = -1.0,
+    block_b: int = 128, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Exact tier-2 solve for (n, batch) panels."""
+    n, b = p.shape
+    bb = min(block_b, max(1, b))
+    pp = _pad_to(p, (1, bb))
+    out = _thomas(pp, lam=lam, h=h, block_b=bb,
+                  interpret=on_cpu() if interpret is None else interpret)
+    return out[:, :b]
+
+
+def denoise_stencil(
+    p: jnp.ndarray, *, lam: float, h: float = -1.0,
+    block_b: int = 128, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Truncated-Neumann tier-2 denoise for (n, batch) panels."""
+    n, b = p.shape
+    bb = min(block_b, max(1, b))
+    pp = _pad_to(p, (1, bb))
+    out = _stencil(pp, lam=lam, h=h, block_b=bb,
+                   interpret=on_cpu() if interpret is None else interpret)
+    return out[:, :b]

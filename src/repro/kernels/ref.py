@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ec_matmul_ref",
+    "encode_matmul_ref",
+    "tridiag_solve_ref",
+    "stencil_denoise_ref",
+    "quantize_tile_ref",
+]
+
+
+def quantize_tile_ref(w: jnp.ndarray, levels: int, tile_k: int, tile_n: int) -> jnp.ndarray:
+    """Per-(tile_k x tile_n)-tile symmetric quantization (MCA conductance grid).
+
+    Computed in fp32 regardless of input dtype -- this matches the kernels,
+    which cast the VMEM tile to fp32 before the conductance rounding (a bf16
+    round near a bin edge would otherwise flip bins vs. the oracle).
+    """
+    k, n = w.shape
+    assert k % tile_k == 0 and n % tile_n == 0
+    t = w.astype(jnp.float32).reshape(k // tile_k, tile_k, n // tile_n, tile_n)
+    scale = jnp.max(jnp.abs(t), axis=(1, 3), keepdims=True)
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.round(t / scale * (levels - 1)) / (levels - 1) * scale
+    return q.reshape(k, n)
+
+
+def encode_matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    eps: jnp.ndarray,
+    sigma: float,
+    levels: int,
+    tile_k: int,
+    tile_n: int,
+) -> jnp.ndarray:
+    """y = x @ W_tilde with W_tilde = Q(W) * (1 + sigma * eps), per-tile Q."""
+    q = quantize_tile_ref(w, levels, tile_k, tile_n)
+    w_tilde = q * (1.0 + sigma * eps.astype(jnp.float32))
+    return x.astype(jnp.float32) @ w_tilde
+
+
+def ec_matmul_ref(
+    x: jnp.ndarray,
+    x_tilde: jnp.ndarray,
+    w_tilde: jnp.ndarray,
+    dw: jnp.ndarray,
+) -> jnp.ndarray:
+    """Tier-1 EC product (fused form): p = x @ W_tilde + x_tilde @ (W - W_tilde)."""
+    f32 = jnp.float32
+    return x.astype(f32) @ w_tilde.astype(f32) + x_tilde.astype(f32) @ dw.astype(f32)
+
+
+def tridiag_solve_ref(p: jnp.ndarray, lam: float, h: float = -1.0) -> jnp.ndarray:
+    """Exact solve of (I + lam L^T L) y = p; p is (n, batch)."""
+    from repro.core.error_correction import denoise_least_square
+    return denoise_least_square(p, lam=lam, h=h, method="thomas")
+
+
+def stencil_denoise_ref(p: jnp.ndarray, lam: float, h: float = -1.0) -> jnp.ndarray:
+    """First-order Neumann: y = p - lam * (L^T L) p; p is (n, batch)."""
+    from repro.core.error_correction import denoise_least_square
+    return denoise_least_square(p, lam=lam, h=h, method="neumann")

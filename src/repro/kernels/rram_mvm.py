@@ -1,0 +1,248 @@
+"""Pallas TPU kernels for the RRAM crossbar MVM simulation.
+
+Two kernels, both tiled so that one (block_k x block_n) weight tile == one MCA
+array: the VMEM tile *is* the crossbar, and the grid iteration over K-blocks is
+the virtualization reassignment loop (DESIGN.md section 2).
+
+  * ``encode_matmul``: y = x_tilde @ W_tilde with the encode (per-tile
+    conductance quantization + programming noise) computed **in-VMEM**, so the
+    encoded weights never round-trip to HBM.  This is the analog-simulation
+    fast path: one HBM read of W instead of (write W_tilde + read W_tilde).
+
+  * ``ec_matmul``: the two-tier-EC serving path.  Computes the fused tier-1
+    combination p = x @ W_tilde + x_tilde @ dW (dW = W - W_tilde precomputed at
+    "programming" time), reading x/x_tilde once per tile and issuing two MXU
+    dots per block -- 33% fewer FLOPs than the paper's three analog products.
+
+Block shapes default to (512, 512) weight tiles (the paper's best-performing
+MCA cell size, conveniently 4x the 128x128 MXU tile) and 256-row activation
+panels; fp32 accumulation in the output ref across the K grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["encode_matmul", "ec_matmul"]
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_K = 512   # MCA cell rows (contraction)
+DEFAULT_BLOCK_N = 512   # MCA cell cols (output features)
+
+
+# --------------------------------------------------------------------------- #
+# encode_matmul: on-the-fly encode + matmul
+# --------------------------------------------------------------------------- #
+
+def _encode_matmul_kernel(x_ref, w_ref, eps_ref, o_ref, *, sigma, levels, nsteps):
+    """One (bm, bn) output block, accumulating over the K grid axis.
+
+    The (bk, bn) weight tile in VMEM is one MCA: quantize with the tile's own
+    conductance scale, apply programming noise, then one MXU dot.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w))
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.round(w / scale * (levels - 1)) / (levels - 1) * scale
+    w_tilde = q * (1.0 + sigma * eps_ref[...].astype(jnp.float32))
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w_tilde, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sigma", "levels", "block_m", "block_k", "block_n", "interpret"),
+)
+def encode_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    sigma: float,
+    levels: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = x @ (Q(w) * (1 + sigma * eps)) with per-(block_k, block_n)-tile Q.
+
+    x: (m, k); w, eps: (k, n).  m, k, n must be multiples of the block shape
+    (the ops wrapper pads).  Returns fp32 (m, n).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and eps.shape == w.shape, (x.shape, w.shape, eps.shape)
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(
+            _encode_matmul_kernel, sigma=sigma, levels=levels, nsteps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, eps)
+
+
+# --------------------------------------------------------------------------- #
+# encode_matmul_rng: encode + matmul with IN-KERNEL noise generation
+# --------------------------------------------------------------------------- #
+
+def _encode_matmul_rng_kernel(seed_ref, x_ref, w_ref, o_ref, *, sigma, levels):
+    """Like _encode_matmul_kernel but the programming noise is drawn inside
+    the kernel (pltpu PRNG seeded per tile + Box-Muller), so the eps array
+    never exists in HBM: the weight tile is read exactly once per MCA
+    assignment -- the single-pass analog-simulation path (EXPERIMENTS.md M3).
+    """
+    i, j, s_ = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s_ == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pltpu.prng_seed(seed_ref[0], i, j, s_)
+    w = w_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w))
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.round(w / scale * (levels - 1)) / (levels - 1) * scale
+
+    # Two uniform draws -> Box-Muller standard normal.
+    bits1 = pltpu.prng_random_bits(w.shape)
+    bits2 = pltpu.prng_random_bits(w.shape)
+    u1 = (bits1.astype(jnp.uint32) >> 8).astype(jnp.float32) / (1 << 24)
+    u2 = (bits2.astype(jnp.uint32) >> 8).astype(jnp.float32) / (1 << 24)
+    u1 = jnp.maximum(u1, 1e-7)
+    eta = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+
+    w_tilde = q * (1.0 + sigma * eta)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w_tilde, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sigma", "levels", "block_m", "block_k", "block_n",
+                     "interpret"),
+)
+def encode_matmul_rng(
+    seed: jnp.ndarray,
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    sigma: float,
+    levels: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = x @ encode(w) with in-VMEM noise: W is the only O(k*n) HBM read.
+
+    Validation caveat (DESIGN.md): the CPU TPU-interpreter stubs
+    ``prng_random_bits`` to zeros, so only the sigma=0 path (exact per-tile
+    quantized matmul) and determinism are checkable off-TPU; the Box-Muller
+    noise path exercises real hardware PRNG.  ``interpret`` accepts
+    ``pltpu.InterpretParams()`` on CPU.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    if interpret is True:
+        interpret = pltpu.InterpretParams()
+    return pl.pallas_call(
+        functools.partial(_encode_matmul_rng_kernel, sigma=sigma, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(seed, x, w)
+
+
+# --------------------------------------------------------------------------- #
+# ec_matmul: fused tier-1 error-corrected matmul
+# --------------------------------------------------------------------------- #
+
+def _ec_matmul_kernel(x_ref, xt_ref, wt_ref, dw_ref, o_ref):
+    """p_block = x @ W_tilde + x_tilde @ dW, fp32 accumulation over K grid."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    xt = xt_ref[...].astype(jnp.float32)
+    wt = wt_ref[...].astype(jnp.float32)
+    dw = dw_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, wt, preferred_element_type=jnp.float32)
+    acc += jnp.dot(xt, dw, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_k", "block_n", "interpret"))
+def ec_matmul(
+    x: jnp.ndarray,
+    x_tilde: jnp.ndarray,
+    w_tilde: jnp.ndarray,
+    dw: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused tier-1 EC product p = x @ W_tilde + x_tilde @ (W - W_tilde).
+
+    x, x_tilde: (m, k); w_tilde, dw: (k, n).  Returns fp32 (m, n).
+    """
+    m, k = x.shape
+    _, n = w_tilde.shape
+    assert x_tilde.shape == x.shape and dw.shape == w_tilde.shape
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _ec_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, x_tilde, w_tilde, dw)

@@ -1,0 +1,127 @@
+"""Pallas TPU kernels for the tier-2 denoise solve (I + lam L^T L) y = p.
+
+Two kernels:
+
+  * ``thomas_solve``: exact Thomas algorithm.  The system matrix is constant
+    (Toeplitz tridiagonal + one boundary correction), so the forward-
+    elimination coefficients c'_i and the pivots 1/(b_i - a c'_{i-1}) are
+    precomputed on host (O(n) scalars) and the kernel only runs the RHS
+    recurrences -- a forward and a backward `fori_loop` over rows with the
+    whole (n, block_b) panel resident in VMEM.  Grid over batch blocks.
+
+  * ``stencil_denoise``: the truncated-Neumann form y = p - lam * (L^T L) p
+    (exact to O(lam^2); the paper's lam = 1e-12 makes the truncation error
+    ~1e-24, below fp32 resolution).  A 3-point stencil along rows, fully
+    parallel; grid over batch blocks with the full row dimension per block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["thomas_solve", "stencil_denoise"]
+
+DEFAULT_BLOCK_B = 128
+
+
+def _thomas_kernel(p_ref, cp_ref, piv_ref, o_ref, d_ref, *, n, a_coef):
+    """Forward/backward RHS recurrence; cp (c') and piv (pivots) precomputed."""
+    # Forward elimination: d'_0 = p_0 * piv_0; d'_i = (p_i - a d'_{i-1}) piv_i
+    d_ref[0, :] = p_ref[0, :] * piv_ref[0, 0]
+
+    def fwd(i, _):
+        d_ref[i, :] = (p_ref[i, :] - a_coef * d_ref[i - 1, :]) * piv_ref[i, 0]
+        return 0
+
+    jax.lax.fori_loop(1, n, fwd, 0)
+
+    # Back substitution: y_{n-1} = d'_{n-1}; y_i = d'_i - c'_i y_{i+1}
+    o_ref[n - 1, :] = d_ref[n - 1, :]
+
+    def bwd(t, _):
+        i = n - 2 - t
+        o_ref[i, :] = d_ref[i, :] - cp_ref[i, 0] * o_ref[i + 1, :]
+        return 0
+
+    jax.lax.fori_loop(0, n - 1, bwd, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "h", "block_b", "interpret"))
+def thomas_solve(
+    p: jnp.ndarray,
+    *,
+    lam: float,
+    h: float = -1.0,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Solve (I + lam L^T L) y = p for p of shape (n, batch); returns fp32."""
+    n, b = p.shape
+    assert b % block_b == 0, (b, block_b)
+    # Host-side precompute of the constant elimination coefficients.
+    diag = jnp.full((n,), 1.0 + lam * (1.0 + h * h), jnp.float32).at[0].set(1.0 + lam)
+    a_coef = float(lam * h)  # sub/super diagonal value
+
+    def scan_fn(cprev, bi):
+        piv = 1.0 / (bi - a_coef * cprev)
+        cnew = a_coef * piv
+        return cnew, (cnew, piv)
+
+    _, (cp, piv) = jax.lax.scan(scan_fn, jnp.float32(0.0), diag)
+    cp = cp.at[n - 1].set(0.0)  # no superdiagonal on the last row
+    cp2 = cp[:, None]
+    piv2 = piv[:, None]
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_thomas_kernel, n=n, a_coef=a_coef),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_b), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_b), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, block_b), jnp.float32)],
+        interpret=interpret,
+    )(p.astype(jnp.float32), cp2, piv2)
+
+
+def _stencil_kernel(p_ref, o_ref, *, lam, h):
+    """y = p - lam * K p, K = L^T L 3-point stencil (row 0 diag is 1)."""
+    p = p_ref[...].astype(jnp.float32)
+    n = p.shape[0]
+    up = jnp.concatenate([p[1:], jnp.zeros_like(p[:1])], axis=0)      # p_{i+1}
+    dn = jnp.concatenate([jnp.zeros_like(p[:1]), p[:-1]], axis=0)     # p_{i-1}
+    kp = (1.0 + h * h) * p + h * (up + dn)
+    row0 = kp[:1] - (h * h) * p[:1]
+    kp = jnp.concatenate([row0, kp[1:]], axis=0)
+    o_ref[...] = p - lam * kp
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "h", "block_b", "interpret"))
+def stencil_denoise(
+    p: jnp.ndarray,
+    *,
+    lam: float,
+    h: float = -1.0,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """First-order Neumann denoise of (n, batch) panels; returns fp32."""
+    n, b = p.shape
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, lam=lam, h=h),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, block_b), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, block_b), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(p.astype(jnp.float32))

@@ -1,0 +1,20 @@
+"""Production mesh topology.
+
+A function, not a module-level constant: importing this module never touches
+jax device state.  Single pod = 16x16 = 256 chips (v5e pod slice); multi-pod
+adds a leading 2-wide "pod" axis (512 chips) used for data parallelism with
+compressed cross-pod gradient reduction.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,160 @@
+"""Build the jitted (train|prefill|decode) step for an (arch x shape x mesh)
+cell: the function, its abstract arguments, and in/out shardings.  Used by the
+dry-run, the benchmarks, and the real launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ArchConfig, RRAMBackendConfig,
+                                ShapeConfig, TrainConfig)
+from repro.configs.registry import (batch_specs, decode_cache_specs,
+                                    decode_cache_len, model_module)
+from repro.distributed.sharding import (batch_pspec, cache_pspecs, data_axes,
+                                        mesh_axis_sizes, param_pspecs)
+from repro.models import params as PM
+from repro.models.common import Runtime
+from repro.models.rram import program_specs
+from repro.train.optimizer import adamw_init
+
+__all__ = ["CellSpec", "build_cell", "make_runtime"]
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one cell."""
+    fn: Any                      # callable to jit
+    args: Tuple                  # abstract (ShapeDtypeStruct) args
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def make_runtime(mesh: Mesh, rram: Optional[RRAMBackendConfig] = None,
+                 **kw) -> Runtime:
+    kw.setdefault("q_chunk", 512)     # bounds flash-attention block buffers
+    kw.setdefault("kv_chunk", 512)
+    return Runtime(rram=rram, mesh=mesh, batch_axes=data_axes(mesh),
+                   key=None, **kw)
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree)
+
+
+def build_cell(arch: ArchConfig, shape_name: str, mesh: Mesh,
+               *,
+               rram: Optional[RRAMBackendConfig] = None,
+               tcfg: Optional[TrainConfig] = None,
+               reduced: bool = False,
+               runtime_kw: Optional[Dict] = None) -> CellSpec:
+    shape = SHAPES[shape_name]
+    cfg = arch.reduced() if reduced else arch.model
+    mod = model_module(cfg)
+    runtime_kw = dict(runtime_kw or {})
+    if shape.kind == "train":
+        # Static causal skip halves attention block work (-35% memory term,
+        # EXPERIMENTS.md Perf T2); only for train seqs -- at 32k prefill the
+        # unrolled block schedule would blow up compile time.
+        runtime_kw.setdefault("causal_skip", True)
+    rt = make_runtime(mesh, rram=rram, **runtime_kw)
+    pd = jnp.dtype(cfg.param_dtype)
+
+    specs = mod.init_specs(cfg)
+    if rram is not None and rram.enabled:
+        specs = program_specs(specs, rram)
+    params_abs = PM.abstract(specs, pd)
+
+    if shape.kind == "train":
+        mode = arch.train_sharding
+        pspecs = param_pspecs(specs, mesh, mode)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        # ZeRO: optimizer state follows the FSDP rules even if params are TP.
+        opt_pspecs = type(opt_abs)(
+            m=param_pspecs(specs, mesh, "fsdp_tp"),
+            v=param_pspecs(specs, mesh, "fsdp_tp"),
+            count=P())
+        bspecs = batch_specs(arch, shape, reduced)
+        bps = jax.tree.map(
+            lambda l: batch_pspec(l.shape, mesh, shape.global_batch), bspecs)
+        dsz = 1
+        for a in data_axes(mesh):
+            dsz *= mesh_axis_sizes(mesh)[a]
+        # 16 accumulation steps (1 sequence per device per microbatch at the
+        # assigned shapes) bounds live activations; must stay divisible by
+        # the data-parallel degree.
+        micro = max(shape.global_batch // 16, dsz)
+        tcfg = tcfg or TrainConfig(microbatch=micro, remat="block")
+        from repro.train.train_loop import make_train_step
+        fn = make_train_step(mod, cfg, tcfg, rt,
+                             grad_shardings=_ns(mesh, param_pspecs(
+                                 specs, mesh, "fsdp_tp")))
+        metrics_sh = {"loss": P(), "grad_norm": P(), "lr": P()}
+        return CellSpec(
+            fn=fn,
+            args=(params_abs, opt_abs, bspecs),
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_pspecs),
+                          _ns(mesh, bps)),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_pspecs),
+                           _ns(mesh, metrics_sh)),
+            donate=(0, 1),
+            meta={"kind": "train", "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    # Inference sharding: TP keeps weights resident (no per-token gathers --
+    # the earlier FSDP fallback for B=1 long-context traded 7 ms of HBM reads
+    # for 210 ms of all-gathers per token; see EXPERIMENTS.md section Perf
+    # iteration L1).
+    pspecs = param_pspecs(specs, mesh, arch.infer_sharding)
+
+    if shape.kind == "prefill":
+        bspecs = batch_specs(arch, shape, reduced)
+        bps = jax.tree.map(
+            lambda l: batch_pspec(l.shape, mesh, shape.global_batch), bspecs)
+        max_len = decode_cache_len(cfg, shape)
+
+        def prefill_fn(params, batch):
+            if cfg.family == "rwkv6":
+                return mod.prefill(params, batch, cfg, rt)
+            return mod.prefill(params, batch, cfg, rt, max_len)
+
+        out_abs = jax.eval_shape(prefill_fn, params_abs, bspecs)
+        vocab_ok = cfg.vocab % mesh_axis_sizes(mesh)["model"] == 0
+        logits_sh = P(data_axes(mesh), None, "model" if vocab_ok else None)
+        cache_sh = cache_pspecs(out_abs[1], mesh, shape.global_batch)
+        return CellSpec(
+            fn=prefill_fn,
+            args=(params_abs, bspecs),
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, bps)),
+            out_shardings=(_ns(mesh, logits_sh), _ns(mesh, cache_sh)),
+            meta={"kind": "prefill",
+                  "tokens": shape.global_batch * shape.seq_len},
+        )
+
+    # decode
+    caches_abs = decode_cache_specs(arch, shape, reduced)
+    tokens_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    cache_sh = cache_pspecs(caches_abs, mesh, shape.global_batch)
+    tok_sh = batch_pspec(tokens_abs.shape, mesh, shape.global_batch)
+
+    def decode_fn(params, tokens, caches):
+        return mod.decode_step(params, tokens, caches, cfg, rt)
+
+    vocab_ok = cfg.vocab % mesh_axis_sizes(mesh)["model"] == 0
+    logits_sh = P(data_axes(mesh) if shape.global_batch > 1 else None,
+                  None, "model" if vocab_ok else None)
+    return CellSpec(
+        fn=decode_fn,
+        args=(params_abs, tokens_abs, caches_abs),
+        in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, tok_sh),
+                      _ns(mesh, cache_sh)),
+        out_shardings=(NamedSharding(mesh, logits_sh), _ns(mesh, cache_sh)),
+        donate=(2,),
+        meta={"kind": "decode", "tokens": shape.global_batch},
+    )

@@ -1,0 +1,2 @@
+"""Model zoo: all families share the interface
+init_specs/loss/prefill/decode_step (see transformer.py docstring)."""

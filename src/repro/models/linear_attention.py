@@ -1,0 +1,167 @@
+"""Chunked linear-attention recurrences for RWKV-6 (per-channel data-dependent
+decay) and Mamba-2 SSD (per-head scalar decay).
+
+Both are the same algebra:  S_t = D_t . S_{t-1} + k_t v_t^T,  o_t = q_t^T S_*,
+with D diagonal.  A naive time-scan is O(T) sequential elementwise work that
+starves the MXU; the chunked form turns everything into (c x c) / (c x D)
+matmuls with one inter-chunk scan of length T/c -- the standard SSD/FLA
+factorization, TPU-native.
+
+Numerics: the separable intra-chunk form uses exp(+-cumlog decay); per-token
+log-decay is clamped to [LOG_CLAMP, -1e-6] (LOG_CLAMP = -1.5) so the within-
+chunk exponentials stay inside fp32 range for chunk <= 64.  This bounds the
+fastest representable decay to exp(-1.5) ~ 0.22/token -- a documented modeling
+deviation (DESIGN.md) that only binds for very-fast-decay channels.
+
+Shapes: q/k (B, T, H, Dk), v (B, T, H, Dv), state (B, H, Dk, Dv).
+RWKV: o_t uses S_{t-1} plus a (u . k_t) v_t bonus;  SSD: o_t uses S_t.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_wkv", "chunked_ssd", "wkv_decode_step", "ssd_decode_step"]
+
+LOG_CLAMP = -1.5
+
+
+def _chunk(x: jnp.ndarray, c: int) -> jnp.ndarray:
+    b, t = x.shape[:2]
+    return x.reshape((b, t // c, c) + x.shape[2:])
+
+
+def chunked_wkv(
+    r: jnp.ndarray,            # (B, T, H, Dk) receptance (query)
+    k: jnp.ndarray,            # (B, T, H, Dk)
+    v: jnp.ndarray,            # (B, T, H, Dv)
+    log_w: jnp.ndarray,        # (B, T, H, Dk) per-channel log decay (<= 0)
+    u: jnp.ndarray,            # (H, Dk) current-token bonus
+    state0: Optional[jnp.ndarray] = None,   # (B, H, Dk, Dv)
+    chunk: int = 32,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 WKV. Returns (out (B, T, H, Dv), final_state)."""
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    c = chunk
+    f32 = jnp.float32
+
+    lw = jnp.clip(log_w.astype(f32), LOG_CLAMP, -1e-6)
+    rc = _chunk(r.astype(f32), c)     # (B, NC, c, H, Dk)
+    kc = _chunk(k.astype(f32), c)
+    vc = _chunk(v.astype(f32), c)
+    lwc = _chunk(lw, c)
+
+    cum = jnp.cumsum(lwc, axis=2)                 # B_tau inclusive
+    cum_prev = cum - lwc                          # B_{tau-1}
+    total = cum[:, :, -1]                         # (B, NC, H, Dk)
+
+    r_in = rc * jnp.exp(cum_prev)                 # decay from chunk start
+    k_out = kc * jnp.exp(-cum)                    # inverse decay
+    k_end = kc * jnp.exp(total[:, :, None] - cum)  # decay to chunk end
+
+    # Intra-chunk scores: A[tau, s] = sum_d r'_tau k'_s, strictly lower-tri.
+    scores = jnp.einsum("bnchd,bnshd->bnhcs", r_in, k_out)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    # Bonus diagonal (current token): r_tau . (u * k_tau).
+    bonus = jnp.einsum("bnchd,hd,bnchd->bnhc", rc, u.astype(f32), kc)
+    out_intra = jnp.einsum("bnhcs,bnshp->bnchp", scores, vc)
+    out_intra += bonus[..., None].transpose(0, 1, 3, 2, 4) * vc
+
+    # Inter-chunk: o_tau += (r_tau * exp(cum_prev))^T S_start; scan over chunks.
+    kv_end = jnp.einsum("bnchd,bnchp->bnhdp", k_end, vc)   # chunk state delta
+
+    def step(S, xs):
+        r_in_n, kv_n, tot_n = xs            # (B, c, H, Dk), (B, H, Dk, Dv), (B, H, Dk)
+        o = jnp.einsum("bchd,bhdp->bchp", r_in_n, S)
+        S = S * jnp.exp(tot_n)[..., None] + kv_n
+        return S, o
+
+    s0 = (jnp.zeros((b, h, dk, dv), f32) if state0 is None
+          else state0.astype(f32))
+    xs = (r_in.transpose(1, 0, 2, 3, 4), kv_end.transpose(1, 0, 2, 3, 4),
+          total.transpose(1, 0, 2, 3))
+    s_fin, o_inter = jax.lax.scan(step, s0, xs)
+    o_inter = o_inter.transpose(1, 0, 2, 3, 4)             # (B, NC, c, H, Dv)
+
+    out = (out_intra + o_inter).reshape(b, t, h, dv)
+    return out.astype(r.dtype), s_fin
+
+
+def wkv_decode_step(r, k, v, log_w, u, state):
+    """Single-token RWKV-6 step. r/k/v/log_w: (B, H, D*); state (B, H, Dk, Dv)."""
+    f32 = jnp.float32
+    rf, kf, vf = r.astype(f32), k.astype(f32), v.astype(f32)
+    lw = jnp.clip(log_w.astype(f32), LOG_CLAMP, -1e-6)
+    att = state + (u.astype(f32)[None] * kf)[..., None] * vf[..., None, :]
+    out = jnp.einsum("bhd,bhdp->bhp", rf, att)
+    state = state * jnp.exp(lw)[..., None] + kf[..., None] * vf[..., None, :]
+    return out.astype(r.dtype), state
+
+
+def chunked_ssd(
+    q: jnp.ndarray,            # (B, T, H, N)  (mamba2 C)
+    k: jnp.ndarray,            # (B, T, H, N)  (mamba2 B)
+    v: jnp.ndarray,            # (B, T, H, P)  (mamba2 x * dt)
+    log_a: jnp.ndarray,        # (B, T, H) per-head scalar log decay (<= 0)
+    state0: Optional[jnp.ndarray] = None,   # (B, H, N, P)
+    chunk: int = 32,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba-2 SSD. o_t includes the current token. Returns (out, final_state)."""
+    b, t, h, n = q.shape
+    p = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    c = chunk
+    f32 = jnp.float32
+
+    la = jnp.clip(log_a.astype(f32), LOG_CLAMP, -1e-9)
+    qc = _chunk(q.astype(f32), c)
+    kc = _chunk(k.astype(f32), c)
+    vc = _chunk(v.astype(f32), c)
+    lac = _chunk(la, c)
+
+    cum = jnp.cumsum(lac, axis=2)                  # (B, NC, c, H) inclusive
+    total = cum[:, :, -1]
+
+    # Separable inclusive intra decay: exp(L_tau - L_s) = exp(L_tau) exp(-L_s).
+    # With per-token log decay clamped to >= LOG_CLAMP and c <= 64 the
+    # exponentials stay within fp32 range (|exponent| <= 96).
+    q_dec = qc * jnp.exp(cum)[..., None]
+    k_inv = kc * jnp.exp(-cum)[..., None]
+    scores = jnp.einsum("bnchd,bnshd->bnhcs", q_dec, k_inv)
+    tri = jnp.tril(jnp.ones((c, c), bool))         # inclusive of diagonal
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    out_intra = jnp.einsum("bnhcs,bnshp->bnchp", scores, vc)
+
+    k_end = kc * jnp.exp(total[:, :, None] - cum)[..., None]
+    kv_end = jnp.einsum("bnchd,bnchp->bnhdp", k_end, vc)
+    q_in = qc * jnp.exp(cum)[..., None]
+
+    def step(S, xs):
+        q_n, kv_n, tot_n = xs
+        o = jnp.einsum("bchd,bhdp->bchp", q_n, S)
+        S = S * jnp.exp(tot_n)[:, :, None, None] + kv_n
+        return S, o
+
+    s0 = (jnp.zeros((b, h, n, p), f32) if state0 is None else state0.astype(f32))
+    xs = (q_in.transpose(1, 0, 2, 3, 4), kv_end.transpose(1, 0, 2, 3, 4),
+          total.transpose(1, 0, 2))
+    s_fin, o_inter = jax.lax.scan(step, s0, xs)
+    o_inter = o_inter.transpose(1, 0, 2, 3, 4)
+
+    out = (out_intra + o_inter).reshape(b, t, h, p)
+    return out.astype(q.dtype), s_fin
+
+
+def ssd_decode_step(q, k, v, log_a, state):
+    """Single-token SSD step. q/k (B,H,N), v (B,H,P), log_a (B,H)."""
+    f32 = jnp.float32
+    a = jnp.exp(jnp.clip(log_a.astype(f32), LOG_CLAMP, 0.0))
+    state = state * a[..., None, None] + (k.astype(f32)[..., None]
+                                          * v.astype(f32)[..., None, :])
+    out = jnp.einsum("bhd,bhdp->bhp", q.astype(f32), state)
+    return out.astype(q.dtype), state

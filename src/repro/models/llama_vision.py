@@ -1,0 +1,137 @@
+"""Llama-3.2-Vision-11B text backbone: llama-style decoder with gated
+cross-attention image layers interleaved every ``cross_attn_every`` layers
+(8 super-blocks of 4 self-attn layers + 1 cross-attn layer for the 40-layer
+config).  The vision encoder is a STUB: ``input_specs()`` provides precomputed
+patch embeddings (B, n_patches, d_model), per the assignment.
+
+Cross-attn layers use a zero-init tanh gate (the published warm-start trick),
+attend with no mask, and need no KV update during decode -- patch K/V are
+computed once at prefill and carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (Runtime, attention, attention_specs, cross_entropy_loss,
+                     embed_spec, init_kv_cache, mlp, mlp_specs, rmsnorm,
+                     rmsnorm_spec, unembed_spec)
+from .params import stack_specs
+from . import transformer as base
+
+__all__ = ["init_specs", "loss", "prefill", "decode_step"]
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int]:
+    per = cfg.cross_attn_every - 1          # self layers per super-block
+    n_super = cfg.n_layers // cfg.cross_attn_every
+    return n_super, per
+
+
+def cross_layer_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln": rmsnorm_spec(cfg.d_model),
+        "attn": attention_specs(cfg, cross=True),
+        "ln_mlp": rmsnorm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def init_specs(cfg: ModelConfig) -> Dict:
+    n_super, per = _layout(cfg)
+    return {
+        "embed": embed_spec(cfg.vocab_pad, cfg.d_model),
+        "super": stack_specs(n_super, {
+            "self": stack_specs(per, base.layer_specs(cfg)),
+            "cross": cross_layer_specs(cfg),
+        }),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+        "lm_head": unembed_spec(cfg.d_model, cfg.vocab_pad),
+    }
+
+
+def _cross_apply(cp, x, patches, cfg, rt):
+    a, _ = attention(cp["attn"], rmsnorm(cp["ln"], x, cfg.norm_eps), cfg, rt,
+                     kv_x=patches, causal=False)
+    x = x + a                                    # tanh gate applied inside attention
+    m = mlp(cp["mlp"], rmsnorm(cp["ln_mlp"], x, cfg.norm_eps), cfg, rt)
+    return x + m
+
+
+def forward(params, tokens, patches, cfg, rt, positions=None, caches=None):
+    from .common import constrain_batch
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = constrain_batch(params["embed"].astype(cd)[tokens], rt)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    n_super, per = _layout(cfg)
+
+    def super_body(carry, xs):
+        h = constrain_batch(carry, rt)
+        sp, cache = xs
+
+        def self_body(hh, lx):
+            lp, c = lx
+            hh, c = base.layer_apply(lp, hh, cfg, rt, positions, c)
+            return hh, c
+
+        if cache is None:
+            def self_body_nc(hh, lp):
+                hh, _ = base.layer_apply(lp, hh, cfg, rt, positions, None)
+                return hh, None
+            fn = self_body_nc
+            if getattr(rt, "remat", "none") in ("block", "full"):
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            h, _ = jax.lax.scan(fn, h, sp["self"])
+            new_c = None
+        else:
+            h, new_c = jax.lax.scan(self_body, h, (sp["self"], cache))
+        h = _cross_apply(sp["cross"], h, patches, cfg, rt)
+        return h, new_c
+
+    if caches is None:
+        def body(h, sp):
+            h, _ = super_body(h, (sp, None))
+            return h, None
+        x, _ = jax.lax.scan(body, x, params["super"])
+        new = None
+    else:
+        def body(h, xs):
+            return super_body(h, xs)
+        x, new = jax.lax.scan(body, x, (params["super"], caches))
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), new
+
+
+def loss(params, batch, cfg, rt):
+    hidden, _ = forward(params, batch["tokens"], batch["patches"], cfg, rt)
+    return cross_entropy_loss(base.logits_fn(params, hidden, cfg, rt),
+                              batch["labels"])
+
+
+def init_caches(b, max_len, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    n_super, per = _layout(cfg)
+    one = init_kv_cache(b, max_len, cfg, cd)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super, per) + a.shape).copy(), one)
+
+
+def prefill(params, batch, cfg, rt, max_len):
+    tokens = batch["tokens"]
+    caches = init_caches(tokens.shape[0], max_len, cfg)
+    hidden, caches = forward(params, tokens, batch["patches"], cfg, rt,
+                             caches=caches)
+    logits = base.logits_fn(params, hidden[:, -1:], cfg, rt)
+    return logits, {"kv": caches, "patches": batch["patches"]}
+
+
+def decode_step(params, tokens, caches, cfg, rt):
+    cur = caches["kv"]["len"][0, 0]
+    positions = jnp.broadcast_to(cur[None, None], tokens.shape).astype(jnp.int32)
+    hidden, kv = forward(params, tokens, caches["patches"], cfg, rt,
+                         positions=positions, caches=caches["kv"])
+    return base.logits_fn(params, hidden, cfg, rt), {"kv": kv,
+                                                     "patches": caches["patches"]}

@@ -1,0 +1,109 @@
+"""Mamba-2 block (SSD), the backbone of zamba2.
+
+Block: in_proj -> (z, x, B, C, dt); causal depthwise conv over (x,B,C); silu;
+SSD recurrence y = SSD(C, B, x*dt; a = exp(-exp(A_log) dt)) + D*x; gated
+rmsnorm with silu(z); out_proj.  n_groups = 1 (B/C shared across heads).
+
+Projections are separate 2-D kernels (wz/wx/wB/wC/wdt) so the RRAM backend can
+program each, and so TP sharding rules see clean (embed -> heads/state) axes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import Runtime, dense, dense_spec, rmsnorm, rmsnorm_spec
+from .linear_attention import chunked_ssd, ssd_decode_step
+from .params import spec
+
+__all__ = ["mamba_specs", "mamba_apply", "empty_state"]
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "ln": rmsnorm_spec(d),
+        "wz": dense_spec(d, di, axes=("embed", "heads")),
+        "wx": dense_spec(d, di, axes=("embed", "heads")),
+        "wB": dense_spec(d, n, axes=("embed", "state")),
+        "wC": dense_spec(d, n, axes=("embed", "state")),
+        "wdt": dense_spec(d, h, axes=("embed", "heads")),
+        "conv_w": spec((cfg.d_conv, conv_ch), (None, "heads"), init="small", scale=0.1),
+        "conv_b": spec((conv_ch,), ("heads",), init="zeros"),
+        "dt_bias": spec((h,), ("heads",), init="small", scale=0.1),
+        "A_log": spec((h,), ("heads",), init="small", scale=0.5),
+        "D": spec((h,), ("heads",), init="ones"),
+        "norm": {"scale": spec((di,), ("heads",), init="ones")},
+        "out": dense_spec(di, d, axes=("heads", "embed")),
+    }
+
+
+def empty_state(b: int, cfg: ModelConfig, dtype) -> Dict:
+    di, n, h, p_ = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((b, cfg.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((b, h, n, p_), jnp.float32),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along time.  xbc (B, T, C); w (K, C)."""
+    kw = w.shape[0]
+    pad = (conv_state if conv_state is not None
+           else jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[2]), xbc.dtype))
+    xp = jnp.concatenate([pad, xbc], axis=1)              # (B, T+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(kw))
+    new_state = xp[:, -(kw - 1):] if kw > 1 else pad[:, :0]
+    return out + bias[None, None], new_state
+
+
+def mamba_apply(p: Dict, x_in: jnp.ndarray, cfg: ModelConfig,
+                rt: Optional[Runtime], state: Optional[Dict]
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """x_in (B, T, D) -> (residual out, new state).  state None => zeros."""
+    from .common import constrain_batch
+    x_in = constrain_batch(x_in, rt)
+    b, t, d = x_in.shape
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    st = state if state is not None else empty_state(b, cfg, x_in.dtype)
+
+    u = rmsnorm(p["ln"], x_in, cfg.norm_eps)
+    z = dense(p["wz"], u, rt)
+    xr = dense(p["wx"], u, rt)
+    br = dense(p["wB"], u, rt)
+    cr = dense(p["wC"], u, rt)
+    dt_raw = dense(p["wdt"], u, rt)
+
+    xbc = jnp.concatenate([xr, br, cr], axis=-1)
+    xbc, conv_new = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
+                                 p["conv_b"].astype(xbc.dtype), st["conv"])
+    xbc = jax.nn.silu(xbc)
+    xr, br, cr = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,T,H)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt
+
+    xh = xr.reshape(b, t, h, ph)
+    v = xh * dt[..., None].astype(xh.dtype)
+    q = jnp.broadcast_to(cr[:, :, None, :], (b, t, h, n))
+    k = jnp.broadcast_to(br[:, :, None, :], (b, t, h, n))
+
+    if t == 1:
+        y1, ssm_new = ssd_decode_step(q[:, 0], k[:, 0], v[:, 0],
+                                      log_a[:, 0], st["ssm"])
+        y = y1[:, None]
+    else:
+        y, ssm_new = chunked_ssd(q, k, v, log_a, state0=st["ssm"],
+                                 chunk=min(32, t))
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, t, di)
+    y = rmsnorm({"scale": p["norm"]["scale"]}, y, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(p["out"], y, rt)
+    return x_in + out, {"conv": conv_new, "ssm": ssm_new}

@@ -1,0 +1,120 @@
+"""Parameter-spec machinery (flax is not installed; this is the light-weight
+pytree convention the whole framework uses).
+
+A model is described once as a *spec tree*: nested dicts whose leaves are
+:class:`ParamSpec` (shape + logical sharding axes + initializer).  From the
+spec tree we derive everything else:
+
+  * ``materialize(specs, key, dtype)``      -> real parameter pytree
+  * ``abstract(specs, dtype)``              -> ShapeDtypeStruct pytree (dry-run!)
+  * ``logical_axes(specs)``                 -> pytree of logical-axis tuples
+  * sharding: distributed/sharding.py maps logical axes -> mesh PartitionSpecs
+
+Logical axis vocabulary (mapped to mesh axes by rule tables):
+  "embed"    - d_model
+  "mlp"      - feed-forward hidden
+  "heads"    - attention query heads
+  "kv_heads" - attention kv heads
+  "head_dim" - per-head feature dim
+  "vocab"    - vocabulary
+  "expert"   - MoE experts
+  "state"    - SSM/WKV state channels
+  "layer"    - stacked scan-over-layers leading axis (never sharded)
+  None       - replicated dim
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "spec",
+    "materialize",
+    "abstract",
+    "logical_axes",
+    "is_spec",
+    "tree_paths",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: Optional[float] = None  # overrides the default fan-in scale
+    dtype: Any = None              # overrides the materialize dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="normal", scale=None, dtype=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(s: ParamSpec, key: jax.Array, dtype) -> jnp.ndarray:
+    dt = s.dtype or dtype
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dt)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dt)
+    if s.init == "embed":
+        sc = s.scale if s.scale is not None else 1.0
+        return (jax.random.normal(key, s.shape, jnp.float32) * sc).astype(dt)
+    if s.init == "small":
+        sc = s.scale if s.scale is not None else 0.02
+        return (jax.random.normal(key, s.shape, jnp.float32) * sc).astype(dt)
+    # default: truncated-normal fan-in scaling on the contraction dim(s):
+    # convention -- the LAST axis is the output dim, everything else is fan-in,
+    # except stacked-layer ("layer") and expert ("expert") leading axes.
+    dims = [d for d, a in zip(s.shape, s.axes) if a not in ("layer", "expert")]
+    fan_in = max(1, int(np.prod(dims[:-1])) if len(dims) > 1 else
+                 (dims[0] if dims else 1))
+    sc = s.scale if s.scale is not None else 1.0 / math.sqrt(fan_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, s.shape, jnp.float32) * sc
+    return w.astype(dt)
+
+
+def materialize(specs, key: jax.Array, dtype=jnp.float32):
+    """Instantiate real parameters from a spec tree (deterministic in key)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree -- parameters that are never allocated."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def tree_paths(tree, is_leaf=None):
+    """[(path_string, leaf)] for debugging and checkpoint manifests."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    return [(jax.tree_util.keystr(p), v) for p, v in flat]
+
+
+def stack_specs(n: int, layer_specs):
+    """Prepend an (n,)-sized "layer" axis to every spec (scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layer",) + s.axes,
+                            s.init, s.scale, s.dtype),
+        layer_specs, is_leaf=is_spec)

@@ -1,0 +1,125 @@
+"""Programming a model's linear layers onto the RRAM analog backend.
+
+``program_rram`` walks a parameter pytree; every 2-D linear kernel named "w"
+gains two siblings:
+
+  * ``w_tilde``: the encoded (quantized + programming-noise) conductance image,
+    produced by per-(cell_rows x cell_cols)-tile encoding after ``k_iters``
+    write-verify passes -- exactly :func:`repro.core.crossbar.encode_tiled`.
+  * ``dw = w - w_tilde``: the tier-1 correction operand (stored in
+    ``dw_dtype``; bf16 by default -- dw is O(sigma * w), so the beyond-paper
+    compression costs ~sigma * 2^-8 relative error, measured in tests).
+
+It also returns the aggregate :class:`WriteStats` for programming the whole
+model -- the analog deployment's one-time write energy/latency, reported by
+the serve benchmarks.  ``program_specs`` is the shape-level twin used by the
+dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RRAMBackendConfig
+from repro.core.crossbar import CrossbarConfig, encode_tiled, write_cost
+from repro.core.devices import get_device
+from repro.core.virtualization import MCAGeometry
+from repro.core.write_verify import WriteStats
+from .params import ParamSpec, is_spec, spec
+
+__all__ = ["program_rram", "program_specs", "crossbar_cfg"]
+
+
+def crossbar_cfg(cfg: RRAMBackendConfig) -> CrossbarConfig:
+    return CrossbarConfig(
+        device=get_device(cfg.device),
+        geom=MCAGeometry(tile_rows=1, tile_cols=1,
+                         cell_rows=cfg.cell_rows, cell_cols=cfg.cell_cols),
+        k_iters=cfg.k_iters, ec=cfg.ec, ec_mode=cfg.ec_mode,
+        denoise_method=cfg.denoise_method, lam=cfg.lam,
+        encode_inputs=cfg.encode_inputs,
+    )
+
+
+def _encode_2d(w: jnp.ndarray, key: jax.Array, ccfg: CrossbarConfig) -> jnp.ndarray:
+    """Pad to cell multiples, tile-encode, slice back (fp32 internally)."""
+    r_, c_ = ccfg.geom.cell_rows, ccfg.geom.cell_cols
+    m, n = w.shape
+    mp, np_ = -(-m // r_) * r_, -(-n // c_) * c_
+    wp = jnp.pad(w.astype(jnp.float32), ((0, mp - m), (0, np_ - n)))
+    enc = encode_tiled(wp, key, ccfg)
+    return enc[:m, :n]
+
+
+def program_rram(
+    params: Any,
+    cfg: RRAMBackendConfig,
+    key: jax.Array,
+) -> Tuple[Any, WriteStats]:
+    """Return (programmed params, total write stats).
+
+    Works on real or stacked (scan-over-layers) kernels: a kernel of shape
+    (L, d_in, d_out) is encoded per layer via vmap (each layer maps onto its
+    own set of MCA tiles)."""
+    ccfg = crossbar_cfg(cfg)
+    total = WriteStats.zero()
+    counter = [0]
+
+    def visit(tree):
+        nonlocal total
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for name, sub in tree.items():
+            if name == "w" and hasattr(sub, "ndim") and sub.ndim in (2, 3):
+                counter[0] += 1
+                k = jax.random.fold_in(key, counter[0])
+                if sub.ndim == 2:
+                    wt = _encode_2d(sub, k, ccfg)
+                    total = total + write_cost(sub.shape[0], sub.shape[1], ccfg)
+                else:  # stacked layers
+                    keys = jax.random.split(k, sub.shape[0])
+                    wt = jax.vmap(lambda w_, k_: _encode_2d(w_, k_, ccfg))(
+                        sub.astype(jnp.float32), keys)
+                    per = write_cost(sub.shape[1], sub.shape[2], ccfg)
+                    total = total + WriteStats(
+                        energy_j=per.energy_j * sub.shape[0],
+                        latency_s=per.latency_s * sub.shape[0],
+                        iterations=per.iterations,
+                        final_delta=per.final_delta)
+                out[name] = sub
+                out["w_tilde"] = wt.astype(sub.dtype)
+                out["dw"] = (sub.astype(jnp.float32) - wt).astype(cfg.dw_dtype)
+            elif isinstance(sub, dict):
+                out[name] = visit(sub)
+            else:
+                out[name] = sub
+        return out
+
+    return visit(params), total
+
+
+def program_specs(specs: Any, cfg: RRAMBackendConfig) -> Any:
+    """Spec-tree twin of :func:`program_rram` for dry-runs: adds w_tilde/dw
+    ParamSpecs with the same shapes/logical axes as each kernel."""
+
+    def visit(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for name, sub in tree.items():
+            if name == "w" and is_spec(sub) and len(sub.shape) in (2, 3):
+                out[name] = sub
+                out["w_tilde"] = spec(sub.shape, sub.axes, init="zeros",
+                                      dtype=sub.dtype)
+                out["dw"] = spec(sub.shape, sub.axes, init="zeros",
+                                 dtype=cfg.dw_dtype)
+            elif isinstance(sub, dict):
+                out[name] = visit(sub)
+            else:
+                out[name] = sub
+        return out
+
+    return visit(specs)

@@ -1,0 +1,208 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay).  rwkv6-1.6b.
+
+Faithful structure: token-shift interpolation, LoRA-produced per-channel decay
+log_w = -exp(w0 + tanh(x_w A_w) B_w) (the defining RWKV-6 feature), WKV
+recurrence with current-token bonus u, per-head group-norm, gated output, and
+squared-ReLU channel-mix.  Simplifications (DESIGN.md): static token-shift
+mixing coefficients (RWKV-6's extra data-dependent token-shift LoRA omitted),
+layernorms -> rmsnorm, decay clamped per linear_attention.LOG_CLAMP.
+
+Training/prefill use the chunked WKV (matmul form); decode is the O(1)-state
+single-token step -- which is why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (Runtime, cross_entropy_loss, dense, dense_spec,
+                     embed_spec, rmsnorm, rmsnorm_spec, unembed_spec)
+from .linear_attention import chunked_wkv, wkv_decode_step
+from .params import spec, stack_specs
+from . import transformer as base
+
+__all__ = ["init_specs", "loss", "prefill", "decode_step"]
+
+LORA_R = 64
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    dh = cfg.ssm_head_dim
+    return cfg.d_model // dh, dh
+
+
+def layer_specs(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, dh = _heads(cfg)
+    return {
+        "ln1": rmsnorm_spec(d),
+        "ln2": rmsnorm_spec(d),
+        "tm": {
+            "mu_r": spec((d,), ("embed",), init="small"),
+            "mu_k": spec((d,), ("embed",), init="small"),
+            "mu_v": spec((d,), ("embed",), init="small"),
+            "mu_g": spec((d,), ("embed",), init="small"),
+            "mu_w": spec((d,), ("embed",), init="small"),
+            "wr": dense_spec(d, d, axes=("embed", "heads")),
+            "wk": dense_spec(d, d, axes=("embed", "heads")),
+            "wv": dense_spec(d, d, axes=("embed", "heads")),
+            "wg": dense_spec(d, d, axes=("embed", "heads")),
+            "wo": dense_spec(d, d, axes=("heads", "embed")),
+            "w0": spec((d,), ("heads",), init="small", scale=0.5),
+            "w_lora_a": {"w": spec((d, LORA_R), ("embed", None), scale=0.01)},
+            "w_lora_b": {"w": spec((LORA_R, d), (None, "heads"), scale=0.01)},
+            "u": spec((h, dh), ("heads", None), init="small"),
+            "gn_scale": spec((d,), ("heads",), init="ones"),
+            "gn_bias": spec((d,), ("heads",), init="zeros"),
+        },
+        "cm": {
+            "mu_k": spec((d,), ("embed",), init="small"),
+            "mu_r": spec((d,), ("embed",), init="small"),
+            "wk": dense_spec(d, f, axes=("embed", "mlp")),
+            "wv": dense_spec(f, d, axes=("mlp", "embed")),
+            "wr": dense_spec(d, d, axes=("embed", "embed")),
+        },
+    }
+
+
+def init_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": embed_spec(cfg.vocab_pad, cfg.d_model),
+        "layers": stack_specs(cfg.n_layers, layer_specs(cfg)),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+        "lm_head": unembed_spec(cfg.d_model, cfg.vocab_pad),
+    }
+
+
+def _shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Token shift: previous token's features (zeros / carried state at t=0)."""
+    first = (jnp.zeros_like(x[:, :1]) if last is None else last[:, None])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _group_norm(p, x, cfg, eps=1e-5):
+    """Per-head layernorm of the WKV output; x (B, T, H, Dh) -> (B, T, D)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    b, t = x.shape[:2]
+    y = y.reshape(b, t, -1)
+    return (y * p["gn_scale"].astype(jnp.float32)
+            + p["gn_bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def time_mix(p, x, cfg, rt, state, last_x, chunk=32):
+    """Returns (out, new_state, new_last_x). state (B, H, Dk, Dv)."""
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    xx = _shift(x, last_x) - x
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xv = x + xx * p["mu_v"].astype(x.dtype)
+    xg = x + xx * p["mu_g"].astype(x.dtype)
+    xw = x + xx * p["mu_w"].astype(x.dtype)
+
+    r = dense(p["wr"], xr, rt).reshape(b, t, h, dh)
+    k = dense(p["wk"], xk, rt).reshape(b, t, h, dh)
+    v = dense(p["wv"], xv, rt).reshape(b, t, h, dh)
+    g = dense(p["wg"], xg, rt)
+
+    # Data-dependent decay (the RWKV-6 contribution).
+    lora = jnp.tanh(dense(p["w_lora_a"], xw, rt)) @ p["w_lora_b"]["w"].astype(x.dtype)
+    log_w = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    log_w = log_w.reshape(b, t, h, dh)
+
+    if t == 1:
+        out1, state = wkv_decode_step(r[:, 0], k[:, 0], v[:, 0],
+                                      log_w[:, 0], p["u"], state)
+        out = out1[:, None]
+    else:
+        out, state = chunked_wkv(r, k, v, log_w, p["u"], state0=state,
+                                 chunk=min(chunk, t))
+    out = _group_norm(p, out, cfg)
+    out = dense(p["wo"], out * jax.nn.silu(g), rt)
+    return out, state, x[:, -1]
+
+
+def channel_mix(p, x, cfg, rt, last_x):
+    xx = _shift(x, last_x) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xk, rt)))
+    return jax.nn.sigmoid(dense(p["wr"], xr, rt)) * dense(p["wv"], k, rt), x[:, -1]
+
+
+def _empty_state(b, cfg, dtype):
+    h, dh = _heads(cfg)
+    return {
+        "S": jnp.zeros((b, h, dh, dh), jnp.float32),
+        "tm_x": jnp.zeros((b, cfg.d_model), dtype),
+        "cm_x": jnp.zeros((b, cfg.d_model), dtype),
+    }
+
+
+def init_caches(b: int, cfg: ModelConfig) -> Dict:
+    cd = jnp.dtype(cfg.compute_dtype)
+    one = _empty_state(b, cfg, cd)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def layer_apply(lp, x, cfg, rt, state):
+    """state None (training, fresh zeros) or per-layer dict."""
+    from .common import constrain_batch
+    x = constrain_batch(x, rt)
+    st = state if state is not None else _empty_state(x.shape[0], cfg, x.dtype)
+    a, s_new, tm_x = time_mix(lp["tm"], rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                              cfg, rt, st["S"],
+                              None if state is None else st["tm_x"])
+    x = x + a
+    c, cm_x = channel_mix(lp["cm"], rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                          cfg, rt, None if state is None else st["cm_x"])
+    x = x + c
+    return x, {"S": s_new, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def forward(params, tokens, cfg, rt, caches=None):
+    from .common import constrain_batch
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = constrain_batch(params["embed"].astype(cd)[tokens], rt)
+
+    if caches is None:
+        def body(h, lp):
+            h, _ = layer_apply(lp, h, cfg, rt, None)
+            return h, None
+        fn = body
+        if getattr(rt, "remat", "none") in ("block", "full"):
+            fn = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+        new = None
+    else:
+        def body(h, xs):
+            lp, st = xs
+            h, st = layer_apply(lp, h, cfg, rt, st)
+            return h, st
+        x, new = jax.lax.scan(body, x, (params["layers"], caches))
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), new
+
+
+def loss(params, batch, cfg, rt):
+    hidden, _ = forward(params, batch["tokens"], cfg, rt)
+    logits = base.logits_fn(params, hidden, cfg, rt)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg, rt, max_len=None):
+    tokens = batch["tokens"]
+    caches = init_caches(tokens.shape[0], cfg)
+    hidden, caches = forward(params, tokens, cfg, rt, caches=caches)
+    return base.logits_fn(params, hidden[:, -1:], cfg, rt), caches
+
+
+def decode_step(params, tokens, caches, cfg, rt):
+    hidden, caches = forward(params, tokens, cfg, rt, caches=caches)
+    return base.logits_fn(params, hidden, cfg, rt), caches

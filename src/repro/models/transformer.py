@@ -1,0 +1,134 @@
+"""Decoder-only transformer LM (yi-9b, qwen3-1.7b/8b, nemotron-4-15b; also the
+text backbone reused by whisper's decoder and llama-3.2-vision).
+
+Scan-over-layers with stacked parameters (compact HLO, fast SPMD compiles,
+remat-able).  Uniform model interface (all families implement this):
+
+  init_specs(cfg)                          -> spec tree
+  loss(params, batch, cfg, rt)             -> scalar CE
+  prefill(params, batch, cfg, rt, max_len) -> (last_logits, caches)
+  decode_step(params, tokens, caches, cfg, rt) -> (logits, caches)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (
+    Runtime, attention, attention_specs, constrain_batch, cross_entropy_loss,
+    dense, embed_spec, init_kv_cache, mlp, mlp_specs, rmsnorm, rmsnorm_spec,
+    unembed_spec,
+)
+from .params import stack_specs
+
+__all__ = ["init_specs", "loss", "forward", "prefill", "decode_step",
+           "layer_specs", "layer_apply"]
+
+
+def layer_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln_attn": rmsnorm_spec(cfg.d_model),
+        "attn": attention_specs(cfg),
+        "ln_mlp": rmsnorm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def init_specs(cfg: ModelConfig) -> Dict:
+    s = {
+        "embed": embed_spec(cfg.vocab_pad, cfg.d_model),
+        "layers": stack_specs(cfg.n_layers, layer_specs(cfg)),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = unembed_spec(cfg.d_model, cfg.vocab_pad)
+    return s
+
+
+def layer_apply(lp: Dict, x: jnp.ndarray, cfg: ModelConfig, rt: Runtime,
+                positions, cache: Optional[Dict]) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    x = constrain_batch(x, rt)
+    a, cache = attention(lp["attn"], rmsnorm(lp["ln_attn"], x, cfg.norm_eps),
+                         cfg, rt, positions=positions, cache=cache)
+    x = x + a
+    x = x + mlp(lp["mlp"], rmsnorm(lp["ln_mlp"], x, cfg.norm_eps), cfg, rt)
+    return x, cache
+
+
+def _maybe_remat(fn, rt: Runtime):
+    if getattr(rt, "remat", "none") in ("block", "full"):
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig, rt: Runtime,
+            positions=None, caches: Optional[Dict] = None
+            ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """tokens (B, T) -> hidden (B, T, D); scans the stacked layers."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = constrain_batch(params["embed"].astype(cd)[tokens], rt)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    if caches is None:
+        def body(h, lp):
+            h, _ = layer_apply(lp, h, cfg, rt, positions, None)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body, rt), x, params["layers"])
+        new_caches = None
+    else:
+        def body(h, xs):
+            lp, cache = xs
+            h, cache = layer_apply(lp, h, cfg, rt, positions, cache)
+            return h, cache
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), new_caches
+
+
+def logits_fn(params: Dict, hidden: jnp.ndarray, cfg: ModelConfig,
+              rt: Runtime) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = hidden @ params["embed"].astype(hidden.dtype).T
+    else:
+        logits = dense(params["lm_head"], hidden, rt)
+    if cfg.vocab_pad != cfg.vocab:
+        # Padded vocab columns (sharding alignment) are masked out.
+        col = jnp.arange(cfg.vocab_pad, dtype=jnp.int32)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def loss(params: Dict, batch: Dict, cfg: ModelConfig, rt: Runtime) -> jnp.ndarray:
+    hidden, _ = forward(params, batch["tokens"], cfg, rt)
+    logits = logits_fn(params, hidden, cfg, rt)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+def init_caches(batch: int, max_len: int, cfg: ModelConfig) -> Dict:
+    cd = jnp.dtype(cfg.compute_dtype)
+    one = init_kv_cache(batch, max_len, cfg, cd)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def prefill(params: Dict, batch: Dict, cfg: ModelConfig, rt: Runtime,
+            max_len: int) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    caches = init_caches(b, max_len, cfg)
+    hidden, caches = forward(params, tokens, cfg, rt, caches=caches)
+    logits = logits_fn(params, hidden[:, -1:], cfg, rt)
+    return logits, caches
+
+
+def decode_step(params: Dict, tokens: jnp.ndarray, caches: Dict,
+                cfg: ModelConfig, rt: Runtime) -> Tuple[jnp.ndarray, Dict]:
+    """tokens (B, 1) -> next-token logits (B, 1, V), appended caches."""
+    cur = caches["len"][0]                       # scalar per layer (uniform)
+    positions = jnp.broadcast_to(cur[None, None], tokens.shape).astype(jnp.int32)
+    hidden, caches = forward(params, tokens, cfg, rt,
+                             positions=positions, caches=caches)
+    return logits_fn(params, hidden, cfg, rt), caches

@@ -1,0 +1,156 @@
+"""Whisper-tiny backbone (audio enc-dec).  The conv/log-mel frontend is a STUB
+per the assignment: ``input_specs()`` provides precomputed frame embeddings
+(B, S, d_model); sinusoidal positions are added on both sides (the learned
+decoder positions of real Whisper are replaced by sinusoidal so the parameter
+shapes are independent of the assigned sequence lengths -- DESIGN.md).
+
+Encoder: bidirectional attention; decoder: causal self-attn + cross-attn to
+the encoder states + GELU MLP, pre-layernorm throughout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (Runtime, attention, attention_specs, cross_entropy_loss,
+                     dense, embed_spec, init_kv_cache, layernorm,
+                     layernorm_spec, mlp, mlp_specs, sinusoidal_positions,
+                     unembed_spec)
+from .params import stack_specs
+
+__all__ = ["init_specs", "loss", "prefill", "decode_step"]
+
+
+def enc_layer_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln_attn": layernorm_spec(cfg.d_model),
+        "attn": attention_specs(cfg),
+        "ln_mlp": layernorm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln_self": layernorm_spec(cfg.d_model),
+        "self_attn": attention_specs(cfg),
+        "ln_cross": layernorm_spec(cfg.d_model),
+        "cross_attn": attention_specs(cfg),
+        "ln_mlp": layernorm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def init_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "enc_layers": stack_specs(cfg.n_enc_layers, enc_layer_specs(cfg)),
+        "enc_ln_f": layernorm_spec(cfg.d_model),
+        "embed": embed_spec(cfg.vocab_pad, cfg.d_model),
+        "dec_layers": stack_specs(cfg.n_layers, dec_layer_specs(cfg)),
+        "dec_ln_f": layernorm_spec(cfg.d_model),
+        "lm_head": unembed_spec(cfg.d_model, cfg.vocab_pad),
+    }
+
+
+def encode(params, frames, cfg, rt):
+    """frames (B, S, D) -> encoder states (B, S, D)."""
+    from .common import constrain_batch
+    cd = frames.dtype
+    pos = sinusoidal_positions(frames.shape[1], cfg.d_model).astype(cd)
+    x = constrain_batch(frames + pos[None], rt)
+
+    def body(h, lp):
+        a, _ = attention(lp["attn"], layernorm(lp["ln_attn"], h, cfg.norm_eps),
+                         cfg, rt, causal=False)
+        h = h + a
+        h = h + mlp(lp["mlp"], layernorm(lp["ln_mlp"], h, cfg.norm_eps), cfg, rt)
+        return h, None
+
+    fn = body
+    if getattr(rt, "remat", "none") in ("block", "full"):
+        fn = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return layernorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def _dec_layer(lp, x, enc, cfg, rt, positions, cache):
+    a, cache = attention(lp["self_attn"],
+                         layernorm(lp["ln_self"], x, cfg.norm_eps),
+                         cfg, rt, positions=positions, cache=cache)
+    x = x + a
+    c, _ = attention(lp["cross_attn"],
+                     layernorm(lp["ln_cross"], x, cfg.norm_eps),
+                     cfg, rt, kv_x=enc)
+    x = x + c
+    x = x + mlp(lp["mlp"], layernorm(lp["ln_mlp"], x, cfg.norm_eps), cfg, rt)
+    return x, cache
+
+
+def decode(params, tokens, enc, cfg, rt, positions=None, caches=None):
+    from .common import constrain_batch
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = constrain_batch(params["embed"].astype(cd)[tokens], rt)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    # Sinusoidal positional encoding evaluated at the (possibly dynamic) positions.
+    d = cfg.d_model
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, None, :]
+    ang = positions[..., None].astype(jnp.float32) / (10_000.0 ** (2 * dim / d))
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(cd)
+
+    if caches is None:
+        def body(h, lp):
+            h, _ = _dec_layer(lp, h, enc, cfg, rt, positions, None)
+            return h, None
+        fn = body
+        if getattr(rt, "remat", "none") in ("block", "full"):
+            fn = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(fn, x, params["dec_layers"])
+        new = None
+    else:
+        def body(h, xs):
+            lp, cache = xs
+            h, cache = _dec_layer(lp, h, enc, cfg, rt, positions, cache)
+            return h, cache
+        x, new = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    return layernorm(params["dec_ln_f"], x, cfg.norm_eps), new
+
+
+def loss(params, batch, cfg, rt):
+    enc = encode(params, batch["frames"], cfg, rt)
+    hidden, _ = decode(params, batch["tokens"], enc, cfg, rt)
+    from . import transformer as base
+    logits = base.logits_fn(params, hidden, cfg, rt)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+def init_caches(b, max_len, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    one = init_kv_cache(b, max_len, cfg, cd)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def prefill(params, batch, cfg, rt, max_len):
+    """Encode frames + prefill the decoder prompt. Caches carry the encoder
+    states (for cross-attn) alongside the self-attn KV."""
+    enc = encode(params, batch["frames"], cfg, rt)
+    tokens = batch["tokens"]
+    kv = init_caches(tokens.shape[0], max_len, cfg)
+    hidden, kv = decode(params, tokens, enc, cfg, rt, caches=kv)
+    from . import transformer as base
+    logits = base.logits_fn(params, hidden[:, -1:], cfg, rt)
+    return logits, {"kv": kv, "enc": enc}
+
+
+def decode_step(params, tokens, caches, cfg, rt):
+    cur = caches["kv"]["len"][0]
+    positions = jnp.broadcast_to(cur[None, None], tokens.shape).astype(jnp.int32)
+    hidden, kv = decode(params, tokens, caches["enc"], cfg, rt,
+                        positions=positions, caches=caches["kv"])
+    from . import transformer as base
+    logits = base.logits_fn(params, hidden, cfg, rt)
+    return logits, {"kv": kv, "enc": caches["enc"]}

@@ -1,0 +1,163 @@
+"""Zamba2 hybrid: Mamba-2 backbone with one *shared* full-attention block
+applied periodically (every ``cfg.attn_every`` mamba blocks), fed the concat of
+the running hidden state and the original embedding through a per-invocation
+input adapter -- the published Zamba2 topology (DESIGN.md notes the
+simplifications: adapters are plain linear, shared block count = 1).
+
+Layout: n_groups = n_layers // attn_every scan groups (stacked mamba params)
+with a shared-attention invocation after each group, plus a scanned tail of
+n_layers % attn_every mamba blocks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (Runtime, attention, attention_specs, cross_entropy_loss,
+                     dense, dense_spec, embed_spec, init_kv_cache, rmsnorm,
+                     rmsnorm_spec, unembed_spec)
+from .mamba2 import empty_state, mamba_apply, mamba_specs
+from .params import stack_specs
+from . import transformer as base
+
+__all__ = ["init_specs", "loss", "prefill", "decode_step"]
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    return groups, cfg.attn_every, tail
+
+
+def init_specs(cfg: ModelConfig) -> Dict:
+    groups, per, tail = _layout(cfg)
+    d = cfg.d_model
+    s = {
+        "embed": embed_spec(cfg.vocab_pad, cfg.d_model),
+        "groups": stack_specs(groups, stack_specs(per, mamba_specs(cfg))),
+        "shared_attn": {
+            "ln": rmsnorm_spec(2 * d),
+            "attn": attention_specs(cfg),
+        },
+        "adapters_in": stack_specs(groups, dense_spec(2 * d, d, axes=("embed", "embed"))),
+        "adapters_out": stack_specs(groups, dense_spec(d, d, axes=("embed", "embed"))),
+        "ln_f": rmsnorm_spec(d),
+        "lm_head": unembed_spec(d, cfg.vocab_pad),
+    }
+    if tail:
+        s["tail"] = stack_specs(tail, mamba_specs(cfg))
+    return s
+
+
+def _shared_attn_specs_note():
+    """The shared attention block consumes concat(hidden, embed0) projected to
+    d_model by a per-invocation adapter, runs full attention, and its output is
+    projected back and added residually (Zamba2's shared-block dataflow)."""
+
+
+def init_caches(b: int, max_len: int, cfg: ModelConfig) -> Dict:
+    cd = jnp.dtype(cfg.compute_dtype)
+    groups, per, tail = _layout(cfg)
+    one = empty_state(b, cfg, cd)
+    stack2 = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (groups, per) + a.shape).copy(), one)
+    kv = init_kv_cache(b, max_len, cfg, cd)
+    kv_stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (groups,) + a.shape).copy(), kv)
+    caches = {"groups": stack2, "kv": kv_stacked}
+    if tail:
+        caches["tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (tail,) + a.shape).copy(), one)
+    return caches
+
+
+def forward(params, tokens, cfg, rt, positions=None, caches=None):
+    from .common import constrain_batch
+    cd = jnp.dtype(cfg.compute_dtype)
+    x0 = constrain_batch(params["embed"].astype(cd)[tokens], rt)
+    x = x0
+    groups, per, tail = _layout(cfg)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    def mamba_scan(x, stacked, states):
+        if states is None:
+            def body(h, lp):
+                h, _ = mamba_apply(lp, h, cfg, rt, None)
+                return h, None
+            fn = body
+            if getattr(rt, "remat", "none") in ("block", "full"):
+                fn = jax.checkpoint(body, prevent_cse=False)
+            x, _ = jax.lax.scan(fn, x, stacked)
+            return x, None
+        def body(h, xs):
+            lp, st = xs
+            h, st = mamba_apply(lp, h, cfg, rt, st)
+            return h, st
+        return jax.lax.scan(body, x, (stacked, states))
+
+    def shared_block(x_in, x0_in, ain, aout, kv):
+        h = jnp.concatenate([x_in, x0_in], axis=-1)
+        h = rmsnorm(params["shared_attn"]["ln"], h, cfg.norm_eps)
+        h = dense(ain, h, rt)
+        a_out, kv_new = attention(params["shared_attn"]["attn"], h, cfg, rt,
+                                  positions=positions, cache=kv)
+        return x_in + dense(aout, a_out, rt), kv_new
+
+    if getattr(rt, "remat", "none") in ("block", "full"):
+        shared_block = jax.checkpoint(shared_block, prevent_cse=False)
+
+    new_group_states = []
+    new_kv = []
+    for g in range(groups):
+        gp = jax.tree.map(lambda a: a[g], params["groups"])
+        gst = (None if caches is None
+               else jax.tree.map(lambda a: a[g], caches["groups"]))
+        x, gst_new = mamba_scan(constrain_batch(x, rt), gp, gst)
+        # Shared attention invocation (rematerialized under remat policy).
+        ain = jax.tree.map(lambda a: a[g], params["adapters_in"])
+        aout = jax.tree.map(lambda a: a[g], params["adapters_out"])
+        kv = None if caches is None else jax.tree.map(lambda a: a[g], caches["kv"])
+        x, kv = shared_block(constrain_batch(x, rt), x0, ain, aout, kv)
+        new_group_states.append(gst_new)
+        new_kv.append(kv)
+
+    new_tail = None
+    if tail:
+        tst = None if caches is None else caches["tail"]
+        x, new_tail = mamba_scan(x, params["tail"], tst)
+
+    out = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if caches is None:
+        return out, None
+    new_caches = {
+        "groups": jax.tree.map(lambda *a: jnp.stack(a), *new_group_states),
+        "kv": jax.tree.map(lambda *a: jnp.stack(a), *new_kv),
+    }
+    if tail:
+        new_caches["tail"] = new_tail
+    return out, new_caches
+
+
+def loss(params, batch, cfg, rt):
+    hidden, _ = forward(params, batch["tokens"], cfg, rt)
+    return cross_entropy_loss(base.logits_fn(params, hidden, cfg, rt),
+                              batch["labels"])
+
+
+def prefill(params, batch, cfg, rt, max_len):
+    tokens = batch["tokens"]
+    caches = init_caches(tokens.shape[0], max_len, cfg)
+    hidden, caches = forward(params, tokens, cfg, rt, caches=caches)
+    return base.logits_fn(params, hidden[:, -1:], cfg, rt), caches
+
+
+def decode_step(params, tokens, caches, cfg, rt):
+    cur = caches["kv"]["len"][0]
+    positions = jnp.broadcast_to(cur[None, None], tokens.shape).astype(jnp.int32)
+    hidden, caches = forward(params, tokens, cfg, rt,
+                             positions=positions, caches=caches)
+    return base.logits_fn(params, hidden, cfg, rt), caches

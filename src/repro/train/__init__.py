@@ -1,0 +1,3 @@
+from .optimizer import OptState, adamw_init, adamw_update, lr_schedule
+from .train_loop import Trainer, make_train_step
+from .serve import Server, greedy_generate

@@ -1,0 +1,77 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (optax is not
+installed; this is the framework's own optimizer, ZeRO-shardable).
+
+State is a pytree {m, v, count}; m/v are fp32 regardless of param dtype
+(mixed-precision master statistics).  Under ``fsdp_tp`` sharding rules the
+state is sharded over (data, model) -- ZeRO-1 -- because the state trees reuse
+the parameter logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "lr_schedule",
+           "global_norm"]
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros,
+                    v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads, state: OptState, params, cfg: TrainConfig,
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    count = state.count + 1
+    lr = lr_schedule(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                     state.v, grads)
+    c = count.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1 ** c)
+    vhat_scale = 1.0 / (1 - b2 ** c)
+
+    def upd(p, m_, v_):
+        step_ = m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + 1e-8)
+        step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(m, v, count), metrics

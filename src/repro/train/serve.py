@@ -1,0 +1,55 @@
+"""Serving: prefill + greedy decode drivers, with optional RRAM analog
+backend (the paper's technique as a deployment mode -- weights are programmed
+once, per-token MVMs run through the two-tier-EC analog simulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RRAMBackendConfig
+from repro.models.common import Runtime
+from repro.models.rram import program_rram
+
+__all__ = ["Server", "greedy_generate"]
+
+
+@dataclasses.dataclass
+class Server:
+    mod: Any
+    cfg: ModelConfig
+    params: Any
+    rt: Optional[Runtime] = None
+    max_len: int = 512
+    write_stats: Any = None     # analog programming cost (rram backend)
+
+    def __post_init__(self):
+        self.rt = self.rt or Runtime()
+        if self.rt.rram is not None and self.rt.rram.enabled:
+            self.params, self.write_stats = program_rram(
+                self.params, self.rt.rram, jax.random.PRNGKey(7))
+        self._prefill = jax.jit(
+            lambda p, b: self.mod.prefill(p, b, self.cfg, self.rt, self.max_len))
+        self._decode = jax.jit(
+            lambda p, t, c: self.mod.decode_step(p, t, c, self.cfg, self.rt))
+
+    def generate(self, batch: Dict, n_tokens: int) -> jnp.ndarray:
+        """Greedy continuation of ``batch['tokens']`` (B, T) -> (B, n_tokens)."""
+        logits, caches = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for _ in range(n_tokens - 1):
+            logits, caches = self._decode(self.params, tok, caches)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+
+def greedy_generate(mod, params, cfg: ModelConfig, batch: Dict,
+                    n_tokens: int, rt: Optional[Runtime] = None,
+                    max_len: int = 512) -> jnp.ndarray:
+    return Server(mod, cfg, params, rt=rt, max_len=max_len).generate(
+        batch, n_tokens)

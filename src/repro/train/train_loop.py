@@ -1,0 +1,148 @@
+"""Training loop: jitted microbatched train step + the production driver
+(checkpointing, preemption, watchdog, deterministic data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.common import Runtime
+from repro.distributed.fault_tolerance import (CheckpointManager, PREEMPTED,
+                                               Watchdog,
+                                               install_preemption_handler)
+from .optimizer import OptState, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "Trainer"]
+
+
+def make_train_step(mod, cfg: ModelConfig, tcfg: TrainConfig,
+                    rt: Optional[Runtime] = None,
+                    grad_shardings=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With ``tcfg.microbatch`` set, the global batch is split into
+    B/microbatch accumulation steps via lax.scan (fp32 grad accumulators);
+    remat policy is threaded through ``rt.remat``.  ``grad_shardings``
+    (optional NamedSharding tree matching params) pins per-microbatch grads
+    to the ZeRO layout so GSPMD emits reduce-scatters instead of full
+    all-reduces inside the accumulation loop (EXPERIMENTS.md section Perf).
+    """
+    rt = rt or Runtime()
+    rt.remat = tcfg.remat if tcfg.remat != "none" else rt.remat
+
+    def loss_fn(p, mb):
+        return mod.loss(p, mb, cfg, rt)
+
+    def train_step(params, opt_state: OptState, batch):
+        bsz = batch["tokens"].shape[0]
+        if tcfg.microbatch and tcfg.microbatch < bsz:
+            n_acc = bsz // tcfg.microbatch
+            mb_batch = jax.tree.map(
+                lambda a: a.reshape((n_acc, tcfg.microbatch) + a.shape[1:]),
+                batch)
+            if rt.mesh is not None:
+                # The (B,) -> (n_acc, micro) reshape is ambiguous to GSPMD;
+                # without this constraint it may shard the *accumulation* dim
+                # and leave the microbatch unsharded on every device.
+                from jax.sharding import PartitionSpec as P
+                mb_batch = jax.tree.map(
+                    lambda a: jax.lax.with_sharding_constraint(
+                        a, P(None, rt.batch_axes,
+                             *([None] * (a.ndim - 2)))),
+                    mb_batch)
+
+            def body(acc, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                if grad_shardings is not None:
+                    grads = jax.tree.map(
+                        lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                        grads, grad_shardings)
+                acc_loss, acc_grads = acc
+                acc_grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+                return (acc_loss + loss, acc_grads), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss_sum, grads), _ = jax.lax.scan(body, zero, mb_batch)
+            loss = loss_sum / n_acc
+            grads = jax.tree.map(lambda g: g / n_acc, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, tcfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Production driver: deterministic data, async checkpoints, preemption
+    handling and straggler watchdog around a jitted train step."""
+
+    mod: Any
+    cfg: ModelConfig
+    tcfg: TrainConfig
+    params: Any
+    opt_state: Optional[OptState] = None
+    rt: Optional[Runtime] = None
+    ckpt: Optional[CheckpointManager] = None
+    ckpt_every: int = 100
+    step: int = 0
+    watchdog: Watchdog = dataclasses.field(default_factory=Watchdog)
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.opt_state is None:
+            self.opt_state = adamw_init(self.params)
+        self.rt = self.rt or Runtime()
+        install_preemption_handler()
+        step_fn = make_train_step(self.mod, self.cfg, self.tcfg, self.rt)
+        self._step_fn = jax.jit(
+            step_fn, donate_argnums=(0, 1) if self.donate else ())
+
+    # ------------------------------------------------------------------ API
+    def state(self):
+        return {"params": self.params, "opt": self.opt_state._asdict()}
+
+    def save(self, blocking: bool = False):
+        if self.ckpt:
+            self.ckpt.save(self.step, self.state(), blocking=blocking,
+                           extra={"step": self.step})
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        tree = self.ckpt.restore(self.state(), step=step, shardings=shardings)
+        self.params = tree["params"]
+        self.opt_state = OptState(**tree["opt"])
+        self.step = int(self.opt_state.count)
+
+    def run(self, data_iter, n_steps: int) -> Dict[str, list]:
+        history = {"loss": [], "grad_norm": [], "step_time": []}
+        for _ in range(n_steps):
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            metrics["loss"].block_until_ready()
+            dt = time.perf_counter() - t0
+            self.step += 1
+            history["loss"].append(float(metrics["loss"]))
+            history["grad_norm"].append(float(metrics["grad_norm"]))
+            history["step_time"].append(dt)
+            self.watchdog.record(self.step, dt)
+            if self.ckpt and self.step % self.ckpt_every == 0:
+                self.save()
+            if PREEMPTED.is_set():
+                self.save(blocking=True)
+                break
+        if self.ckpt:
+            self.ckpt.wait()
+        return history

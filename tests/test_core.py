@@ -1,0 +1,199 @@
+"""Core MELISO+ unit + property tests: devices, write-verify, EC algebra,
+virtualization, crossbar cost model."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (DEVICES, CrossbarConfig, MCAGeometry, WriteStats,
+                        adjustable_mat_write_and_verify,
+                        adjustable_vec_write_and_verify, block_partition,
+                        corrected_mvm, denoise_least_square, effective_sigma,
+                        first_order_correct, get_device, quantize, rel_l2,
+                        write_cost, zero_padding)
+from repro.core.devices import effective_sigma_py
+from repro.core.virtualization import reassignment_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------- devices
+def test_device_registry():
+    for name in ("epiram", "ag-si", "alox-hfo2", "taox-hfox"):
+        d = get_device(name)
+        assert d.levels >= 8 and 0 < d.sigma0 < 1
+
+    with pytest.raises(KeyError):
+        get_device("nonexistent")
+
+
+def test_effective_sigma_monotone_and_floored():
+    for d in DEVICES.values():
+        sig = [float(effective_sigma(d, k)) for k in range(21)]
+        assert all(a >= b - 1e-9 for a, b in zip(sig, sig[1:]))
+        assert sig[-1] >= d.sigma_floor - 1e-9
+        assert abs(effective_sigma_py(d, 7) - float(effective_sigma(d, 7))) < 1e-6
+
+
+def test_agsi_converges_slower():
+    """Ag-aSi's nonlinearity (2.4/-4.88) must slow the verify loop (paper
+    Fig. 2: plateau at k~11 vs k~2)."""
+    fast = get_device("taox-hfox")
+    slow = get_device("ag-si")
+    assert slow.effective_gain < fast.effective_gain
+
+
+@given(st.integers(2, 64))
+@settings(max_examples=10, deadline=None)
+def test_quantize_levels(levels):
+    w = jax.random.normal(KEY, (32, 32))
+    q = quantize(w, levels)
+    # at most (2*levels - 1) distinct values per scale group
+    vals = np.unique(np.round(np.asarray(q), 6))
+    assert len(vals) <= 2 * levels + 1
+    assert float(jnp.max(jnp.abs(q - w))) <= float(jnp.max(jnp.abs(w))) / (levels - 1)
+
+
+# ---------------------------------------------------------------- write-verify
+def test_write_verify_iterates_until_tolerance():
+    dev = get_device("epiram")
+    a = jax.random.normal(KEY, (64, 64))
+    _, tight = adjustable_mat_write_and_verify(a, KEY, dev, eps=0.03, max_iters=20)
+    _, loose = adjustable_mat_write_and_verify(a, KEY, dev, eps=0.5, max_iters=20)
+    assert int(tight.iterations) >= int(loose.iterations)
+    assert float(tight.energy_j) >= float(loose.energy_j)
+    assert float(tight.final_delta) <= 0.03 + 1e-6 or int(tight.iterations) == 20
+
+
+def test_write_verify_vector():
+    dev = get_device("taox-hfox")
+    x = jax.random.normal(KEY, (66,))
+    xt, stats = adjustable_vec_write_and_verify(x, KEY, dev, eps=1e-6, max_iters=3)
+    assert xt.shape == x.shape
+    assert int(stats.iterations) == 3  # tolerance unreachable -> max iters
+
+
+# ------------------------------------------------------------------ EC algebra
+@given(st.floats(0.01, 0.5), st.floats(0.01, 0.5), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_first_order_cancellation_identity(sa, sx, seed):
+    """p = Ax(1 - eps_A*eps_x) exactly, for multiplicative encode errors
+    (paper Eq. 7) -- first-order terms cancel for ANY noise realization."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    a = jax.random.normal(k1, (24, 24), jnp.float64) \
+        if jax.config.jax_enable_x64 else jax.random.normal(k1, (24, 24))
+    x = jax.random.normal(k2, (24,))
+    ea = sa * jax.random.normal(k3, a.shape)
+    ex = sx * jax.random.normal(k4, x.shape)
+    at = a * (1 + ea)
+    xt = x * (1 + ex)
+    p = first_order_correct(a, at, x, xt, mode="faithful")
+    expected = a @ x - (a * ea) @ (x * ex)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(expected),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_fused_equals_faithful(seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    a = jax.random.normal(k1, (17, 23))
+    x = jax.random.normal(k2, (23, 3))
+    at = a * (1 + 0.1 * jax.random.normal(k3, a.shape))
+    xt = x * (1 + 0.1 * jax.random.normal(k4, x.shape))
+    f = first_order_correct(a, at, x, xt, mode="faithful")
+    g = first_order_correct(a, at, x, xt, mode="fused")
+    np.testing.assert_allclose(np.asarray(f), np.asarray(g), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("lam", [1e-12, 1e-6, 1e-2])
+@pytest.mark.parametrize("n", [8, 66, 257])
+def test_denoise_methods_agree(lam, n):
+    p = jax.random.normal(KEY, (n, 2))
+    yd = denoise_least_square(p, lam, method="dense")
+    yt = denoise_least_square(p, lam, method="thomas")
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yt), rtol=1e-4,
+                               atol=1e-5)
+    if lam <= 1e-6:
+        yn = denoise_least_square(p, lam, method="neumann")
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(yn), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_denoise_solves_the_system():
+    """(I + lam L^T L) y == p for the thomas solve."""
+    from repro.core.error_correction import build_l_matrix
+    n, lam = 40, 0.3
+    p = jax.random.normal(KEY, (n,))
+    y = denoise_least_square(p, lam, method="thomas")
+    l = build_l_matrix(n)
+    m = jnp.eye(n) + lam * (l.T @ l)
+    np.testing.assert_allclose(np.asarray(m @ y), np.asarray(p), rtol=1e-4,
+                               atol=1e-5)
+
+
+# -------------------------------------------------------------- virtualization
+@given(st.integers(1, 200), st.integers(1, 200), st.integers(1, 4),
+       st.integers(1, 4), st.sampled_from([8, 16, 32]))
+@settings(max_examples=25, deadline=None)
+def test_partition_reassemble_identity(m, n, tr, tc, cell):
+    a = jax.random.normal(KEY, (m, n))
+    geom = MCAGeometry(tr, tc, cell, cell)
+    blocks = block_partition(a, geom)
+    mb, nb, cm, cn = blocks.shape
+    back = blocks.transpose(0, 2, 1, 3).reshape(mb * cm, nb * cn)[:m, :n]
+    assert bool(jnp.all(back == a))
+    assert reassignment_count(m, n, geom) == mb * nb
+
+
+def test_zero_padding_preserves_product():
+    a = jax.random.normal(KEY, (66, 66))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (66,))
+    geom = MCAGeometry(2, 2, 32, 32)
+    ap = zero_padding(a, geom)
+    xp = jnp.pad(x, (0, ap.shape[1] - 66))
+    np.testing.assert_allclose(np.asarray((ap @ xp)[:66]), np.asarray(a @ x),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ cost model
+def test_write_cost_scaling():
+    dev = get_device("taox-hfox")
+    geom = MCAGeometry(2, 2, 32, 32)
+    base = CrossbarConfig(device=dev, geom=geom, k_iters=0, ec=False)
+    ec = CrossbarConfig(device=dev, geom=geom, k_iters=0, ec=True)
+    k5 = CrossbarConfig(device=dev, geom=geom, k_iters=5, ec=False)
+    c0 = write_cost(64, 64, base)
+    c_ec = write_cost(64, 64, ec)
+    c_k5 = write_cost(64, 64, k5)
+    # EC writes the X^T array too: ~2x energy for square problems.
+    assert 1.5 < float(c_ec.energy_j) / float(c0.energy_j) < 3.0
+    # k+1 passes scale linearly.
+    np.testing.assert_allclose(float(c_k5.energy_j), 6 * float(c0.energy_j),
+                               rtol=1e-5)
+    # virtualization: a 4x larger problem on the same system -> ~4x latency
+    c_big = write_cost(256, 64, base)
+    assert float(c_big.latency_s) > 3.5 * float(c0.latency_s)
+
+
+def test_corrected_mvm_ec_beats_raw():
+    dev = get_device("alox-hfo2")
+    geom = MCAGeometry(2, 2, 64, 64)
+    a = jax.random.normal(KEY, (100, 100))
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (100,))
+    b = a @ x
+    errs = {}
+    for ec in (False, True):
+        cfg = CrossbarConfig(device=dev, geom=geom, k_iters=5, ec=ec)
+        es = []
+        for r in range(5):
+            y, _ = corrected_mvm(a, x, jax.random.fold_in(KEY, r), cfg)
+            es.append(float(rel_l2(y, b)))
+        errs[ec] = np.mean(es)
+    assert errs[True] < 0.35 * errs[False], errs

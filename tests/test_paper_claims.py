@@ -1,0 +1,92 @@
+"""Validation of the paper's quantitative claims (EXPERIMENTS.md section
+Paper-validation reads from the benchmark; these tests gate the same
+assertions at lower replication counts).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm,
+                        get_device, rel_l2)
+from repro.core.matrices import make_iperturb, paper_matrix
+
+GEOM = MCAGeometry(1, 1, 66, 66)
+KEY = jax.random.PRNGKey(0)
+
+
+def run_device(a, x, b, dev, ec, k=5, reps=6):
+    cfg = CrossbarConfig(device=get_device(dev), geom=GEOM, k_iters=k, ec=ec)
+    fn = jax.jit(lambda kk: corrected_mvm(a, x, kk, cfg))
+    errs, stats = [], None
+    for r in range(reps):
+        kk = jax.random.fold_in(jax.random.fold_in(KEY, r),
+                                hash(dev) % (2 ** 30))
+        y, stats = fn(kk)
+        errs.append(float(rel_l2(y, b)))
+    return float(np.mean(errs)), stats
+
+
+@pytest.fixture(scope="module")
+def m1():
+    a = jnp.asarray(paper_matrix("bcsstk02"), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(42), (66,))
+    return a, x, a @ x
+
+
+def test_ec_error_reduction_over_80pct(m1):
+    """Paper: >90% reduction of first+second-order error (we gate at 80% for
+    the low-replication test; the benchmark reports ~89-95%)."""
+    a, x, b = m1
+    raw, _ = run_device(a, x, b, "taox-hfox", ec=False)
+    ec, _ = run_device(a, x, b, "taox-hfox", ec=True)
+    assert ec < 0.2 * raw, (raw, ec)
+
+
+def test_low_end_device_matches_epiram(m1):
+    """Paper: TaOx-HfOx + EC reaches EpiRAM-class accuracy..."""
+    a, x, b = m1
+    epi, epi_stats = run_device(a, x, b, "epiram", ec=False)
+    tao, tao_stats = run_device(a, x, b, "taox-hfox", ec=True)
+    assert tao < 1.5 * epi, (tao, epi)
+    # ...at >= ~3 orders of magnitude less write energy and ~2 orders less
+    # latency (paper: 3-5 and 2 respectively).
+    assert float(epi_stats.energy_j) / float(tao_stats.energy_j) > 300
+    assert float(epi_stats.latency_s) / float(tao_stats.latency_s) > 50
+
+
+def test_write_verify_iterations_reduce_error(m1):
+    a, x, b = m1
+    e0, _ = run_device(a, x, b, "alox-hfo2", ec=False, k=0)
+    e5, _ = run_device(a, x, b, "alox-hfo2", ec=False, k=5)
+    assert e5 < e0
+
+
+def test_error_flat_across_cell_sizes():
+    """Paper Fig. 4: accuracy is preserved under virtualization."""
+    n = 512
+    a = jax.random.normal(KEY, (n, n)) / np.sqrt(n)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (n,))
+    b = a @ x
+    errs = []
+    for cell in (32, 128, 256):
+        geom = MCAGeometry(2, 2, cell, cell)
+        cfg = CrossbarConfig(device=get_device("taox-hfox"), geom=geom,
+                             k_iters=5, ec=True)
+        y, _ = corrected_mvm(a, x, KEY, cfg)
+        errs.append(float(rel_l2(y, b)))
+    assert max(errs) < 3 * min(errs) + 1e-3, errs
+
+
+def test_small_cells_cost_more_energy_latency():
+    """Paper Fig. 4: virtualization reassignments inflate E_w/L_w for small
+    arrays."""
+    from repro.core import write_cost
+    dev = get_device("taox-hfox")
+    small = CrossbarConfig(device=dev, geom=MCAGeometry(8, 8, 32, 32),
+                           k_iters=5, ec=True)
+    big = CrossbarConfig(device=dev, geom=MCAGeometry(8, 8, 512, 512),
+                         k_iters=5, ec=True)
+    cs = write_cost(4096, 4096, small)
+    cb = write_cost(4096, 4096, big)
+    assert float(cs.latency_s) > 5 * float(cb.latency_s)
