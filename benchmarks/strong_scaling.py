@@ -14,10 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm,
-                        get_device, rel_l2, rel_linf, streamed_corrected_mvm)
+from repro.core import (CrossbarConfig, MCAGeometry, get_device, rel_l2,
+                        rel_linf)
 from repro.core.matrices import ImplicitBandedMatrix, paper_matrix
 from repro.core.virtualization import reassignment_count
+from repro.engine import AnalogEngine
 
 GEOM = MCAGeometry(tile_rows=8, tile_cols=8, cell_rows=1024, cell_cols=1024)
 
@@ -31,40 +32,39 @@ def run(quick: bool = True) -> List[Dict]:
     rows: List[Dict] = []
     key = jax.random.PRNGKey(11)
 
+    engine = AnalogEngine(cfg)
+
+    def row_from(name, n, A, y, b):
+        per_call = A.input_write_stats(batch=1)
+        e_w = float(A.write_stats.energy_j) + float(per_call.energy_j)
+        l_w = float(A.write_stats.latency_s) + float(per_call.latency_s)
+        norm = max(reassignment_count(n, n, GEOM), 1)
+        return {
+            "name": f"strong/{name}/n{n}",
+            "eps_l2": float(rel_l2(y, b)), "eps_linf": float(rel_linf(y, b)),
+            "E_w": e_w, "L_w": l_w,
+            "E_w_norm": e_w / norm, "L_w_norm": l_w / norm,
+            "reassignments": norm,
+        }
+
     for name in (MATS_SMALL if quick else MATS_SMALL):
         a = jnp.asarray(paper_matrix(name), jnp.float32)
         n = a.shape[0]
         x = jax.random.normal(jax.random.fold_in(key, n), (n,))
         b = a @ x
-        y, stats = jax.jit(lambda k: corrected_mvm(a, x, k, cfg))(
-            jax.random.fold_in(key, 2 * n))
-        norm = max(reassignment_count(n, n, GEOM), 1)
-        rows.append({
-            "name": f"strong/{name}/n{n}",
-            "eps_l2": float(rel_l2(y, b)), "eps_linf": float(rel_linf(y, b)),
-            "E_w": float(stats.energy_j), "L_w": float(stats.latency_s),
-            "E_w_norm": float(stats.energy_j) / norm,
-            "L_w_norm": float(stats.latency_s) / norm,
-            "reassignments": norm,
-        })
+        A = engine.program(a, jax.random.fold_in(key, 2 * n))
+        rows.append(row_from(name, n, A, engine.mvm(A, x), b))
 
     big = MATS_BIG[:1] if quick else MATS_BIG
     cap = GEOM.capacity[0]
+    streamed = AnalogEngine(cfg, execution="streamed")
     for name, n in big:
         imp = ImplicitBandedMatrix(n=n, cap_m=cap, cap_n=cap, seed=n)
         x = jax.random.normal(jax.random.fold_in(key, n), (n,))
         b = imp.matvec(x)
-        y, stats = streamed_corrected_mvm(
-            imp.block, x, n, n, jax.random.fold_in(key, 3 * n), cfg)
-        norm = max(reassignment_count(n, n, GEOM), 1)
-        rows.append({
-            "name": f"strong/{name}/n{n}",
-            "eps_l2": float(rel_l2(y, b)), "eps_linf": float(rel_linf(y, b)),
-            "E_w": float(stats.energy_j), "L_w": float(stats.latency_s),
-            "E_w_norm": float(stats.energy_j) / norm,
-            "L_w_norm": float(stats.latency_s) / norm,
-            "reassignments": norm,
-        })
+        A = streamed.program(imp.block, jax.random.fold_in(key, 3 * n),
+                             shape=(n, n))
+        rows.append(row_from(name, n, A, streamed.mvm(A, x), b))
     return rows
 
 

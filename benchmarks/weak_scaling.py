@@ -14,10 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm, get_device,
+from repro.core import (CrossbarConfig, MCAGeometry, get_device,
                         rel_l2, rel_linf)
 from repro.core.matrices import make_spd_with_condition
 from repro.core.virtualization import reassignment_count
+from repro.engine import AnalogEngine
 
 N = 4960   # add32 dimension
 
@@ -38,14 +39,16 @@ def run(quick: bool = True) -> List[Dict]:
         for dev in devices:
             cfg = CrossbarConfig(device=get_device(dev), geom=geom,
                                  k_iters=5, ec=True)
-            y, stats = jax.jit(
-                lambda k: corrected_mvm(a, x, k, cfg))(jax.random.PRNGKey(cell))
+            engine = AnalogEngine(cfg)
+            A = engine.program(a, jax.random.PRNGKey(cell))
+            y = engine.mvm(A, x)
+            per_call = A.input_write_stats(batch=1)
             rows.append({
                 "name": f"weak/{dev}/cell{cell}",
                 "eps_l2": float(rel_l2(y, b)),
                 "eps_linf": float(rel_linf(y, b)),
-                "E_w": float(stats.energy_j),
-                "L_w": float(stats.latency_s),
+                "E_w": float(A.write_stats.energy_j) + float(per_call.energy_j),
+                "L_w": float(A.write_stats.latency_s) + float(per_call.latency_s),
                 "reassignments": reassignment_count(N, N, geom),
             })
     return rows

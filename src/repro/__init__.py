@@ -1,3 +1,9 @@
 """repro: MELISO+ (distributed RRAM in-memory computing with integrated
-error correction) as a production-grade JAX training/inference framework."""
-__version__ = "1.0.0"
+error correction) as a production-grade JAX training/inference framework.
+
+The public serving surface is :class:`repro.engine.AnalogEngine` -- program a
+matrix onto the analog system once, execute many corrected MVMs against it.
+"""
+__version__ = "1.1.0"
+
+from repro.engine import AnalogEngine, AnalogMatrix  # noqa: E402,F401

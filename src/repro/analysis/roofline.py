@@ -59,6 +59,8 @@ def analyze_compiled(compiled, n_devices: int,
     # XLA's cost_analysis counts while bodies once; the loop-aware walker in
     # hlo_cost scales by trip count (and catches collectives inside scans).
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):   # jax < 0.5: one dict per device
+        xla_cost = xla_cost[0] if xla_cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     hc = analyze_hlo_text(hlo)

@@ -27,12 +27,22 @@ from .virtualization import (
 )
 from .crossbar import (
     CrossbarConfig,
+    block_keys,
     corrected_mvm,
     encode_tiled,
+    input_write_cost,
+    matrix_write_cost,
+    program_blocks,
+    programmed_block_mvm,
     streamed_corrected_mvm,
     write_cost,
 )
-from .distributed import distributed_corrected_mvm, shard_matrix
+from .distributed import (
+    distributed_corrected_mvm,
+    make_distributed_program,
+    make_distributed_programmed_mvm,
+    shard_matrix,
+)
 from .metrics import rel_l2, rel_linf, relative_error
 
 __all__ = [n for n in dir() if not n.startswith("_")]

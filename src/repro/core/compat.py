@@ -1,0 +1,55 @@
+"""Version-compat shims for the jax API surface this repo spans.
+
+The codebase targets current jax but must run on 0.4.x containers: a few
+symbols moved between releases (``shard_map`` graduated from
+``jax.experimental`` and renamed ``check_rep`` -> ``check_vma``, Pallas
+renamed ``TPUCompilerParams``).  Import the moved symbols from here so call
+sites stay version-agnostic.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map", "axis_size", "pvary", "set_mesh"]
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` accepting either spelling of the replication check."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis; ``psum(1)`` predates ``jax.lax.axis_size``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def pvary(x, axis_name):
+    """Mark ``x`` device-varying over ``axis_name`` for shard_map's vma
+    tracking; a no-op on jax versions without varying-manual-axes types."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_name)
+    return x
+
+
+def set_mesh(mesh):
+    """Context manager binding the ambient mesh.
+
+    ``jax.set_mesh`` on current jax; on jax < 0.5 the ``Mesh`` object itself
+    is the context manager with the same effect.
+    """
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh

@@ -38,6 +38,11 @@ __all__ = [
     "CrossbarConfig",
     "encode_tiled",
     "write_cost",
+    "matrix_write_cost",
+    "input_write_cost",
+    "block_keys",
+    "program_blocks",
+    "programmed_block_mvm",
     "corrected_mvm",
     "streamed_corrected_mvm",
 ]
@@ -102,8 +107,23 @@ def _encode_vec(x: jnp.ndarray, key: jax.Array, cfg: CrossbarConfig) -> jnp.ndar
 # Analytic write cost (paper Figs. 2-5 accounting)
 # --------------------------------------------------------------------------- #
 
-def write_cost(m: int, n: int, cfg: CrossbarConfig, batch: int = 1) -> WriteStats:
-    """Analytic write energy/latency for one corrected MVM of an (m, n) problem."""
+def write_cost(
+    m: int,
+    n: int,
+    cfg: CrossbarConfig,
+    batch: int = 1,
+    *,
+    include_matrix: bool = True,
+    include_inputs: bool = True,
+) -> WriteStats:
+    """Analytic write energy/latency for one corrected MVM of an (m, n) problem.
+
+    The total splits into a *matrix* part (programming the conductance image --
+    paid once under the program-once API) and an *input* part (the per-call x
+    vector write plus the EC X^T replica, scaling with ``batch``).  The
+    ``include_*`` switches select the parts; :func:`matrix_write_cost` and
+    :func:`input_write_cost` are the named halves.
+    """
     dev, geom = cfg.device, cfg.geom
     cap_m, cap_n = geom.capacity
     mb = -(-m // cap_m)
@@ -111,25 +131,29 @@ def write_cost(m: int, n: int, cfg: CrossbarConfig, batch: int = 1) -> WriteStat
     reass = mb * nb
     passes = float(cfg.k_iters + 1)
 
-    if cfg.skip_zero_pad_writes:
-        # Only the cells covering the true (m, n) footprint are programmed.
-        cells_a = float(m) * float(n)
-        rows_a_per_mca = reass * min(geom.cell_rows, max(1, m))
-    else:
-        cells_a = float(mb * cap_m) * float(nb * cap_n)
-        rows_a_per_mca = reass * geom.cell_rows
+    energy = 0.0
+    latency = 0.0
+    if include_matrix:
+        if cfg.skip_zero_pad_writes:
+            # Only the cells covering the true (m, n) footprint are programmed.
+            cells_a = float(m) * float(n)
+            rows_a_per_mca = reass * min(geom.cell_rows, max(1, m))
+        else:
+            cells_a = float(mb * cap_m) * float(nb * cap_n)
+            rows_a_per_mca = reass * geom.cell_rows
+        energy += cells_a * dev.e_write
+        latency += rows_a_per_mca * dev.t_write
 
     c_ = geom.cell_cols
     n_pad = nb * cap_n
-    energy = cells_a * dev.e_write
-    latency = rows_a_per_mca * dev.t_write
-    if cfg.encode_inputs:
-        energy += float(n_pad) * batch * dev.e_write        # x vector write
-        latency += 1.0 * batch * dev.t_write
-    if cfg.ec:
-        # The replicated X^T array (c x c per MCA assignment, paper sec. 2).
-        energy += float(reass * geom.n_mcas) * (c_ * c_) * batch * dev.e_write
-        latency += reass * c_ * batch * dev.t_write
+    if include_inputs:
+        if cfg.encode_inputs:
+            energy += float(n_pad) * batch * dev.e_write        # x vector write
+            latency += 1.0 * batch * dev.t_write
+        if cfg.ec:
+            # The replicated X^T array (c x c per MCA assignment, paper sec. 2).
+            energy += float(reass * geom.n_mcas) * (c_ * c_) * batch * dev.e_write
+            latency += reass * c_ * batch * dev.t_write
     # Pure-Python math throughout: this function is called inside shard_map
     # traces, where any jnp op would produce (un-float-able) tracers.
     return WriteStats(
@@ -140,22 +164,129 @@ def write_cost(m: int, n: int, cfg: CrossbarConfig, batch: int = 1) -> WriteStat
     )
 
 
-# --------------------------------------------------------------------------- #
-# Corrected MVM (reference engine)
-# --------------------------------------------------------------------------- #
+def matrix_write_cost(m: int, n: int, cfg: CrossbarConfig) -> WriteStats:
+    """One-time programming cost of the (m, n) conductance image."""
+    return write_cost(m, n, cfg, include_inputs=False)
 
-def _block_mvm(a_blk, x_blk, key, cfg: CrossbarConfig):
-    """One capacity-sized block: encode (per-tile) + tier-1 EC product."""
-    k_a, k_x = jax.random.split(key)
-    a_t = encode_tiled(a_blk, k_a, cfg)
-    if cfg.encode_inputs:
-        x_t = _encode_vec(x_blk, k_x, cfg)
-    else:
-        x_t = x_blk
-    if cfg.ec:
-        return first_order_correct(a_blk, a_t, x_blk, x_t, mode=cfg.ec_mode)
-    return a_t @ x_t
 
+def input_write_cost(m: int, n: int, cfg: CrossbarConfig,
+                     batch: int = 1) -> WriteStats:
+    """Per-execution cost: x-vector DAC write + EC X^T replica, per column."""
+    return write_cost(m, n, cfg, batch=batch, include_matrix=False)
+
+
+# --------------------------------------------------------------------------- #
+# Program stage / execute stage (the program-once dataflow)
+# --------------------------------------------------------------------------- #
+#
+# The paper's dataflow is program-once / execute-many: the conductance image
+# A_tilde is written to the MCAs one time, then reused across MVMs.  The
+# functions below factor the old monolithic ``corrected_mvm`` into those two
+# stages; :class:`repro.engine.AnalogEngine` is the public handle-based API on
+# top, and the legacy entry points at the bottom of this file are thin
+# compositions kept for backwards compatibility.
+#
+# Key discipline (shared by both stages so that program+execute reproduces the
+# fused legacy path draw-for-draw): the base key splits into one key per
+# capacity block, and each block key splits into (k_a, k_x) -- programming
+# consumes k_a, execution consumes k_x.
+
+
+def block_keys(key: jax.Array, mb: int, nb: int) -> jax.Array:
+    """Per-capacity-block PRNG keys, shaped (mb, nb, ...)."""
+    keys = jax.random.split(key, mb * nb)
+    return keys.reshape((mb, nb) + keys.shape[1:])   # typed or raw key format
+
+
+def assemble_blocks(blocks: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Inverse of :func:`repro.core.virtualization.block_partition`:
+    (mb, nb, cap_m, cap_n) capacity tiles -> dense (m, n), padding sliced."""
+    mb, nb, cm, cn = blocks.shape
+    return blocks.transpose(0, 2, 1, 3).reshape(mb * cm, nb * cn)[:m, :n]
+
+
+def program_blocks(
+    a: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Program stage: encode A onto the (virtual) MCAs, once.
+
+    Returns ``(at_blocks, da_blocks)``, both (mb, nb, cap_m, cap_n):
+    the per-block conductance images ``A_tilde`` and the tier-1 correction
+    operands ``dA = A - A_tilde`` (paper Eq. 7, with the first-order product
+    rewritten as  p = A_tilde x + dA x_tilde).
+    """
+    cap_m, cap_n = cfg.geom.capacity
+    a_pad = zero_padding(a, cfg.geom)
+    mp, np_ = a_pad.shape
+    mb, nb = mp // cap_m, np_ // cap_n
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+    keys = block_keys(key, mb, nb)
+
+    def enc_row(row_blocks, row_keys):
+        def enc_one(a_blk, k):
+            k_a, _ = jax.random.split(k)
+            return encode_tiled(a_blk, k_a, cfg)
+        return jax.vmap(enc_one)(row_blocks, row_keys)
+
+    at_blocks = jax.vmap(enc_row)(blocks, keys)
+    return at_blocks, blocks - at_blocks
+
+
+def programmed_block_mvm(
+    at_blocks: jnp.ndarray,
+    da_blocks: jnp.ndarray,
+    xb: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    tier2: bool = True,
+) -> jnp.ndarray:
+    """Execute stage: corrected MVM against an already-programmed image.
+
+    ``xb`` is (n, batch).  Performs zero matrix-encode work: only the input
+    vector passes through the DAC (x -> x_tilde, per block, consuming the k_x
+    half of the block key), the tier-1 product is assembled from the stored
+    operands as  p = A_tilde x + dA x_tilde,  column-block partials are summed
+    and tier-2 denoising runs on the assembled output (``tier2=False`` defers
+    it, e.g. until after a cross-device psum).  Returns (m, batch).
+    """
+    mb, nb, cap_m, cap_n = at_blocks.shape
+    batch = xb.shape[1]
+    x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
+    x_chunks = x_pad.reshape(nb, cap_n, batch)
+    keys = block_keys(key, mb, nb)
+
+    if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
+        raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
+
+    def per_row(at_row, da_row, row_keys):
+        def per_col(at_blk, da_blk, x_blk, k):
+            _, k_x = jax.random.split(k)
+            x_t = _encode_vec(x_blk, k_x, cfg) if cfg.encode_inputs else x_blk
+            if not cfg.ec:
+                return at_blk @ x_t
+            if cfg.ec_mode == "faithful":
+                # The paper's three analog products, with A = A_tilde + dA.
+                return (at_blk @ x_blk + (at_blk + da_blk) @ x_t
+                        - at_blk @ x_t)
+            return at_blk @ x_blk + da_blk @ x_t             # fused, 2 matmuls
+        partials = jax.vmap(per_col)(at_row, da_row, x_chunks, row_keys)
+        return jnp.sum(partials, axis=0)                     # sum over column blocks
+
+    y_blocks = jax.vmap(per_row)(at_blocks, da_blocks, keys)   # (mb, cap_m, batch)
+    p = y_blocks.reshape(mb * cap_m, batch)[:m]
+    if cfg.ec and tier2:
+        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Legacy one-shot entry points (deprecated shims over the two-stage dataflow)
+# --------------------------------------------------------------------------- #
 
 def corrected_mvm(
     a: jnp.ndarray,
@@ -165,6 +296,10 @@ def corrected_mvm(
 ) -> Tuple[jnp.ndarray, WriteStats]:
     """y ~= A @ x on the simulated multi-MCA system (paper Algorithm 6 + 4).
 
+    .. deprecated:: use :class:`repro.engine.AnalogEngine` -- this one-shot
+       form re-programs the full matrix on every call.  It remains as a shim
+       over the program/execute stages for single-use MVMs and tests.
+
     ``x`` may be (n,) or (n, batch).  The matrix is padded, block-partitioned to
     the system capacity, each block is encoded with per-MCA scales and multiplied
     with tier-1 EC; column-block partials are summed; tier-2 denoising runs on
@@ -173,30 +308,9 @@ def corrected_mvm(
     m, n = a.shape
     squeeze = x.ndim == 1
     xb = x[:, None] if squeeze else x
-    batch = xb.shape[1]
-
-    cap_m, cap_n = cfg.geom.capacity
-    a_pad = zero_padding(a, cfg.geom)
-    mp, np_ = a_pad.shape
-    x_pad = jnp.pad(xb, ((0, np_ - n), (0, 0)))
-    mb, nb = mp // cap_m, np_ // cap_n
-
-    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
-    x_chunks = x_pad.reshape(nb, cap_n, batch)
-    keys = jax.random.split(key, mb * nb)
-    keys = keys.reshape((mb, nb) + keys.shape[1:])   # typed or raw key format
-
-    def per_row(i_blocks, i_keys):
-        def per_col(a_blk, x_blk, k):
-            return _block_mvm(a_blk, x_blk, k, cfg)
-        partials = jax.vmap(per_col)(i_blocks, x_chunks, i_keys)
-        return jnp.sum(partials, axis=0)                     # sum over column blocks
-
-    y_blocks = jax.vmap(per_row)(blocks, keys)               # (mb, cap_m, batch)
-    p = y_blocks.reshape(mb * cap_m, batch)[:m]
-    if cfg.ec:
-        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
-    stats = write_cost(m, n, cfg, batch=1)
+    at_blocks, da_blocks = program_blocks(a, key, cfg)
+    p = programmed_block_mvm(at_blocks, da_blocks, xb, key, cfg, m=m, n=n)
+    stats = write_cost(m, n, cfg, batch=xb.shape[1])
     return (p[:, 0] if squeeze else p), stats
 
 
@@ -212,6 +326,9 @@ def streamed_corrected_mvm(
     (each block capacity-sized, already padded), so matrices such as the paper's
     65,025 x 65,025 case never materialize.  Python loop over blocks; the inner
     step is jitted once and reused.
+
+    .. deprecated:: use ``AnalogEngine(cfg, execution="streamed")`` -- this
+       one-shot form discards the programmed tiles after a single MVM.
     """
     cap_m, cap_n = cfg.geom.capacity
     mb = -(-m // cap_m)
@@ -222,7 +339,15 @@ def streamed_corrected_mvm(
     x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
     x_chunks = x_pad.reshape(nb, cap_n, batch)
 
-    step = jax.jit(lambda a_blk, x_blk, k: _block_mvm(a_blk, x_blk, k, cfg))
+    def _block_mvm(a_blk, x_blk, k):
+        k_a, k_x = jax.random.split(k)
+        a_t = encode_tiled(a_blk, k_a, cfg)
+        x_t = _encode_vec(x_blk, k_x, cfg) if cfg.encode_inputs else x_blk
+        if cfg.ec:
+            return first_order_correct(a_blk, a_t, x_blk, x_t, mode=cfg.ec_mode)
+        return a_t @ x_t
+
+    step = jax.jit(_block_mvm)
     rows = []
     for i in range(mb):
         acc = jnp.zeros((cap_m, batch), jnp.float32)
@@ -233,5 +358,5 @@ def streamed_corrected_mvm(
     p = jnp.concatenate(rows, axis=0)[:m]
     if cfg.ec:
         p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
-    stats = write_cost(m, n, cfg, batch=1)
+    stats = write_cost(m, n, cfg, batch=batch)
     return (p[:, 0] if squeeze else p), stats

@@ -1,13 +1,23 @@
 """Distributed corrected MVM over a JAX device mesh (paper Algorithm 4).
 
 The paper distributes chunk pairs to MPI ranks; here each mesh device owns a
-2-D block of the global matrix (rows over ``row_axis``, contraction columns
-over ``col_axis``) and the set of MCA tiles that block maps onto.  Local
-corrected MVMs produce tier-1 partials that are aggregated with ``psum`` over
-the contraction axis -- the TPU-native image of the paper's MPI reduce -- and
-tier-2 denoising then runs on-node on each device's output segment (the
+2-D block of the global matrix (rows over ``row_axes``, contraction columns
+over ``col_axis``) and the set of MCA tiles that block maps onto.
+
+Program-once dataflow: :func:`make_distributed_program` writes each device's
+conductance image (and the tier-1 correction operand dA) exactly once,
+returning them still sharded -- the programmed operands are *placed* where
+they will be used, like the physical crossbars they model.
+:func:`make_distributed_programmed_mvm` then executes corrected MVMs against
+those resident operands: local tier-1 partials are aggregated with ``psum``
+over the contraction axis -- the TPU-native image of the paper's MPI reduce --
+and tier-2 denoising runs on-node on each device's output segment (the
 paper's "on-node error correction").  The row partition stays sharded: the
 output is produced already distributed, no gather required.
+
+:class:`repro.engine.AnalogEngine` with ``execution="distributed"`` is the
+public interface; :func:`distributed_corrected_mvm` remains as a one-shot
+deprecation shim.
 
 Cost statistics follow the paper's Figs. 4-5 convention: energy/latency are
 reported as the mean across MCAs (mean across devices here).
@@ -21,62 +31,117 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .crossbar import CrossbarConfig, corrected_mvm
+from .compat import shard_map
+from .crossbar import (CrossbarConfig, assemble_blocks, input_write_cost,
+                       matrix_write_cost, program_blocks, programmed_block_mvm,
+                       write_cost)
 from .error_correction import denoise_least_square
+from .virtualization import block_partition
 from .write_verify import WriteStats
 
-__all__ = ["distributed_corrected_mvm", "shard_matrix"]
+__all__ = [
+    "distributed_corrected_mvm",
+    "shard_matrix",
+    "make_distributed_program",
+    "make_distributed_programmed_mvm",
+]
 
 
-def shard_matrix(a: jnp.ndarray, mesh: Mesh, row_axis: str, col_axis: str):
+def shard_matrix(a: jnp.ndarray, mesh: Mesh, row_axis, col_axis: str):
     """Place a global (m, n) matrix block-sharded over (row_axis, col_axis)."""
     return jax.device_put(a, NamedSharding(mesh, P(row_axis, col_axis)))
 
 
-def _tier1_only(cfg: CrossbarConfig) -> CrossbarConfig:
-    """Disable the local tier-2 denoise (lam=0 makes Neumann the identity)."""
-    d = dict(cfg.__dict__)
-    d["lam"] = 0.0
-    d["denoise_method"] = "neumann"
-    return CrossbarConfig(**d)
+def _device_key(key: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+    """Decorrelate programming/DAC noise across ranks (per-device key)."""
+    for ax in axes:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+    return key
 
 
-def make_distributed_mvm(
+def _mean_stats(stats: WriteStats, axes: Tuple[str, ...]) -> WriteStats:
+    n_ranks = jax.lax.psum(1, axis_name=axes)
+    return WriteStats(
+        energy_j=jax.lax.psum(stats.energy_j, axes) / n_ranks,
+        latency_s=jax.lax.psum(stats.latency_s, axes) / n_ranks,
+        iterations=stats.iterations,
+        final_delta=stats.final_delta,
+    )
+
+
+def make_distributed_program(
     cfg: CrossbarConfig,
     mesh: Mesh,
     row_axes: Tuple[str, ...] = ("data",),
     col_axis: str = "model",
 ):
-    """Build the shard_map'd corrected-MVM callable (unjitted, lowerable).
+    """Build the shard_map'd program stage (unjitted, lowerable).
 
-    Signature of the returned fn: (a (m, n), x (n, batch), key) ->
-    (y (m, batch) row-sharded, WriteStats).  ``row_axes`` may name several
-    mesh axes (e.g. ("pod", "data")) for the row partition.
+    Returned fn: (a (m, n), key) -> (a_tilde, da, WriteStats), with a_tilde/da
+    sharded exactly like ``a`` -- the operands are written once and stay
+    resident on their devices.
     """
-    tier1_cfg = _tier1_only(cfg)
+    axes = tuple(row_axes) + (col_axis,)
 
-    def local_fn(a_blk, x_blk, k):
-        # Per-device key: decorrelate programming noise across ranks.
-        for ax in row_axes + (col_axis,):
-            k = jax.random.fold_in(k, jax.lax.axis_index(ax))
-        p_local, stats = corrected_mvm(a_blk, x_blk, k, tier1_cfg)
-        p_local = jax.lax.psum(p_local, axis_name=col_axis)
-        if cfg.ec:
-            p_local = denoise_least_square(
-                p_local, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
-        n_ranks = jax.lax.psum(1, axis_name=row_axes + (col_axis,))
-        e = jax.lax.psum(stats.energy_j, row_axes + (col_axis,)) / n_ranks
-        t = jax.lax.psum(stats.latency_s, row_axes + (col_axis,)) / n_ranks
-        stats = WriteStats(energy_j=e, latency_s=t,
-                           iterations=stats.iterations,
-                           final_delta=stats.final_delta)
-        return p_local, stats
+    def local_fn(a_blk, key):
+        k = _device_key(key, axes)
+        m_loc, n_loc = a_blk.shape
+        at_b, da_b = program_blocks(a_blk, k, cfg)
+        stats = _mean_stats(matrix_write_cost(m_loc, n_loc, cfg), axes)
+        return (assemble_blocks(at_b, m_loc, n_loc),
+                assemble_blocks(da_b, m_loc, n_loc), stats)
 
     row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(P(row_spec, col_axis), P(col_axis, None), P()),
+        in_specs=(P(row_spec, col_axis), P()),
+        out_specs=(P(row_spec, col_axis), P(row_spec, col_axis), P()),
+    )
+
+
+def make_distributed_programmed_mvm(
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    stats_include_matrix: bool = False,
+):
+    """Build the shard_map'd execute stage (unjitted, lowerable).
+
+    Returned fn: (a_tilde, da, x (n, batch), key) -> (y (m, batch) row-sharded,
+    WriteStats).  Performs zero matrix-encode work: tier-1 runs against the
+    resident operands, partials psum over ``col_axis``, tier-2 denoises
+    on-node.  ``stats_include_matrix=True`` reproduces the legacy one-shot
+    accounting (programming + input writes in a single figure).
+    """
+    axes = tuple(row_axes) + (col_axis,)
+
+    def local_fn(at_blk, da_blk, x_blk, key):
+        k = _device_key(key, axes)
+        m_loc, n_loc = at_blk.shape
+        batch = x_blk.shape[1]
+        p = programmed_block_mvm(
+            block_partition(at_blk, cfg.geom),
+            block_partition(da_blk, cfg.geom),
+            x_blk, k, cfg, m=m_loc, n=n_loc, tier2=False)
+        p = jax.lax.psum(p, axis_name=col_axis)
+        if cfg.ec:
+            p = denoise_least_square(
+                p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+        if stats_include_matrix:
+            stats = write_cost(m_loc, n_loc, cfg, batch=batch)
+        else:
+            stats = input_write_cost(m_loc, n_loc, cfg, batch=batch)
+        return p, _mean_stats(stats, axes)
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(row_spec, col_axis), P(row_spec, col_axis),
+                  P(col_axis, None), P()),
         out_specs=(P(row_spec, None), P()),
     )
 
@@ -92,11 +157,22 @@ def distributed_corrected_mvm(
 ) -> Tuple[jnp.ndarray, WriteStats]:
     """y = A @ x with per-device multi-MCA simulation and two-tier EC.
 
+    .. deprecated:: use ``AnalogEngine(cfg, execution="distributed",
+       mesh=mesh)`` -- this one-shot form re-programs the full matrix on every
+       call.  Kept as a shim composing the program and execute stages.
+
     ``a``: global (m, n), m divisible by mesh[row_axis], n by mesh[col_axis].
     ``x``: (n,) or (n, batch).  Output is (m,) / (m, batch), sharded over rows.
     """
     squeeze = x.ndim == 1
     xb = x[:, None] if squeeze else x
-    fn = make_distributed_mvm(cfg, mesh, (row_axis,), col_axis)
-    y, stats = jax.jit(fn)(a, xb, key)
+    program = make_distributed_program(cfg, mesh, (row_axis,), col_axis)
+    execute = make_distributed_programmed_mvm(
+        cfg, mesh, (row_axis,), col_axis, stats_include_matrix=True)
+
+    def fused(a_, xb_, key_):
+        at, da, _ = program(a_, key_)
+        return execute(at, da, xb_, key_)
+
+    y, stats = jax.jit(fused)(a, xb, key)
     return (y[:, 0] if squeeze else y), stats

@@ -1,0 +1,424 @@
+"""Program-once / execute-many analog MVM engine (the public API).
+
+The paper's energy win comes from writing the RRAM conductance image *once*
+and amortizing it over many analog MVMs.  :class:`AnalogEngine` makes that the
+API: ``engine.program(a)`` pays the write cost and returns an
+:class:`AnalogMatrix` handle (the encoded per-tile image ``A_tilde``, the
+tier-1 correction operand ``dA = A - A_tilde``, and the one-time
+:class:`~repro.core.write_verify.WriteStats`); ``engine.mvm(A, x)`` (or simply
+``A @ x``) then runs tier-1 error correction + tier-2 denoising without any
+re-programming, for ``x`` of shape ``(n,)`` or ``(n, batch)``.
+
+One ``execution=`` switch selects where the programmed image lives:
+
+  * ``"local"``       -- dense per-capacity-block tiles on this process;
+  * ``"streamed"``    -- programming consumes a ``block_fn(i, j)`` producer so
+                         the source matrix never materializes (the paper's
+                         65,025^2 case); the encoded tiles are kept;
+  * ``"distributed"`` -- the image is placed once, block-sharded over a JAX
+                         device mesh via :func:`repro.core.distributed.shard_matrix`;
+                         MVMs run tier-1 locally, psum partials over the
+                         contraction axis and denoise on-node.
+
+and a ``backend=`` switch dispatches the inner product:
+
+  * ``"reference"`` -- pure-jnp blockwise oracle (always available);
+  * ``"pallas"``    -- the fused TPU kernel :func:`repro.kernels.rram_ec_matmul`
+                       plus the tier-2 stencil/Thomas kernels (interpret mode
+                       on CPU).
+
+Usage::
+
+    import jax, jax.numpy as jnp
+    from repro.core import CrossbarConfig, MCAGeometry, get_device
+    from repro.engine import AnalogEngine
+
+    cfg = CrossbarConfig(device=get_device("taox-hfox"),
+                         geom=MCAGeometry(1, 1, 66, 66), k_iters=5, ec=True)
+    engine = AnalogEngine(cfg)
+    A = engine.program(a, jax.random.PRNGKey(1))   # one-time write
+    print(A.write_stats.energy_j)                  # programming cost, paid once
+    y1 = A @ x1                                    # corrected MVMs: no encode
+    y2 = A @ x2                                    #   work, only the x DAC pass
+    y, call_stats = engine.mvm_with_stats(A, x3)   # per-call input-write cost
+
+The legacy one-shot entry points (``corrected_mvm``,
+``streamed_corrected_mvm``, ``distributed_corrected_mvm``) remain as thin
+deprecation shims over the same two-stage dataflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar
+from repro.core.crossbar import CrossbarConfig
+from repro.core.error_correction import denoise_least_square
+from repro.core.write_verify import WriteStats
+
+__all__ = ["AnalogEngine", "AnalogMatrix", "EXECUTION_MODES", "BACKENDS"]
+
+EXECUTION_MODES = ("local", "streamed", "distributed")
+BACKENDS = ("reference", "pallas")
+
+
+@dataclasses.dataclass
+class AnalogMatrix:
+    """Handle to a matrix programmed onto the (simulated) analog hardware.
+
+    Holds the per-tile conductance image and tier-1 correction operand in the
+    layout of its engine's execution mode, the one-time programming
+    :class:`WriteStats`, and the base PRNG key whose per-block ``k_x`` halves
+    drive the input DAC noise of successive executions.
+    """
+
+    engine: "AnalogEngine"
+    shape: Tuple[int, int]
+    base_key: jax.Array
+    write_stats: WriteStats
+    # local / streamed layout: (mb, nb, cap_m, cap_n) stacked capacity tiles.
+    at_blocks: Optional[jnp.ndarray] = None
+    da_blocks: Optional[jnp.ndarray] = None
+    # streamed layout keeps the producer instead of materializing da_blocks,
+    # so the resident state is exactly the programmed image (1x, not 2x).
+    block_fn: Optional[Callable[[int, int], jnp.ndarray]] = None
+    # distributed layout: dense (m, n) arrays block-sharded over the mesh.
+    at_dense: Optional[jnp.ndarray] = None
+    da_dense: Optional[jnp.ndarray] = None
+    calls: int = 0
+    # cached dense padded layout for the pallas backend (built on first use).
+    _padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def a_tilde(self) -> jnp.ndarray:
+        """The programmed conductance image, dense and unpadded (m, n)."""
+        if self.at_dense is not None:
+            return self.at_dense
+        return _assemble(self.at_blocks, self.m, self.n)
+
+    @property
+    def da(self) -> jnp.ndarray:
+        """The tier-1 correction operand A - A_tilde, dense unpadded (m, n)."""
+        if self.da_dense is not None:
+            return self.da_dense
+        if self.da_blocks is not None:
+            return _assemble(self.da_blocks, self.m, self.n)
+        mb, nb = self.at_blocks.shape[:2]
+        da = jnp.stack([jnp.stack([self.block_fn(i, j) - self.at_blocks[i, j]
+                                   for j in range(nb)])
+                        for i in range(mb)])
+        return _assemble(da, self.m, self.n)
+
+    def __matmul__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.engine.mvm(self, x)
+
+    def input_write_stats(self, batch: int = 1) -> WriteStats:
+        """Per-execution write cost (x DAC pass + EC X^T replica)."""
+        return self.engine.input_write_stats(self, batch)
+
+
+_assemble = crossbar.assemble_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
+def _exec_reference(at_blocks, da_blocks, xb, key, *, cfg, m, n):
+    return crossbar.programmed_block_mvm(
+        at_blocks, da_blocks, xb, key, cfg, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
+def _exec_pallas(at, da, xb, key, *, cfg, m, n):
+    """Tier-1 via the fused Pallas EC kernel + tier-2 via the solver kernels.
+
+    ``at``/``da`` are the dense *padded* operands (assembled once at first use
+    and cached on the handle).  The kernel path encodes x with a single DAC
+    pass (one noise draw for the whole padded vector) instead of the reference
+    path's per-(block, chunk) draws -- statistically identical, one kernel
+    launch.
+    """
+    from repro.kernels import ops as kops
+
+    x_pad = jnp.pad(xb, ((0, at.shape[1] - xb.shape[0]), (0, 0)))
+    if cfg.encode_inputs:
+        x_t = crossbar._encode_vec(x_pad, jax.random.fold_in(key, 1), cfg)
+    else:
+        x_t = x_pad
+    if cfg.ec:
+        # y^T = x^T A_tilde^T + x_tilde^T dA^T, one fused kernel call.
+        p = kops.rram_ec_matmul(x_pad.T, x_t.T, at.T, da.T).T[:m]
+    else:
+        p = (at @ x_t)[:m]
+    if cfg.ec:
+        if cfg.denoise_method == "neumann":
+            p = kops.denoise_stencil(p, lam=cfg.lam, h=cfg.h)
+        elif cfg.denoise_method == "thomas":
+            p = kops.denoise_thomas(p, lam=cfg.lam, h=cfg.h)
+        else:
+            p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
+                                     method=cfg.denoise_method)
+    return p
+
+
+class AnalogEngine:
+    """Program-once / execute-many corrected-MVM engine.
+
+    Parameters
+    ----------
+    cfg:
+        The :class:`CrossbarConfig` describing one multi-MCA system (for
+        ``execution="distributed"``: the per-device system).
+    execution:
+        ``"local"`` | ``"streamed"`` | ``"distributed"``.
+    backend:
+        ``"reference"`` (pure jnp) | ``"pallas"`` (fused TPU kernels; interpret
+        mode on CPU).  Distributed execution always runs the reference path
+        inside ``shard_map``.
+    mesh, row_axes, col_axis:
+        Mesh placement for ``execution="distributed"``: rows shard over
+        ``row_axes``, the contraction over ``col_axis``.
+    """
+
+    def __init__(
+        self,
+        cfg: CrossbarConfig,
+        *,
+        execution: str = "local",
+        backend: str = "reference",
+        mesh=None,
+        row_axes: Tuple[str, ...] = ("data",),
+        col_axis: str = "model",
+    ):
+        if execution not in EXECUTION_MODES:
+            raise ValueError(
+                f"unknown execution mode {execution!r}; expected one of "
+                f"{EXECUTION_MODES}")
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        if execution == "distributed" and mesh is None:
+            raise ValueError("execution='distributed' requires a mesh")
+        self.cfg = cfg
+        self.execution = execution
+        self.backend = backend
+        self.mesh = mesh
+        self.row_axes = tuple(row_axes)
+        self.col_axis = col_axis
+        self._streamed_step = None      # jitted per-block step, built once
+        if execution == "distributed":
+            from repro.core import distributed as D
+            self._dist_program = jax.jit(D.make_distributed_program(
+                cfg, mesh, self.row_axes, col_axis))
+            self._dist_mvm = jax.jit(D.make_distributed_programmed_mvm(
+                cfg, mesh, self.row_axes, col_axis))
+
+    # ------------------------------------------------------------- programming
+    def program(
+        self,
+        a: Union[jnp.ndarray, Callable[[int, int], jnp.ndarray]],
+        key: jax.Array,
+        *,
+        shape: Optional[Tuple[int, int]] = None,
+    ) -> AnalogMatrix:
+        """Write ``a`` onto the analog system once; returns the reusable handle.
+
+        ``a`` is a dense (m, n) array, or -- for ``execution="streamed"`` -- a
+        ``block_fn(i, j)`` producer of capacity-sized (already padded) blocks,
+        in which case ``shape=(m, n)`` gives the logical problem size.
+        """
+        if callable(a) and not hasattr(a, "shape"):
+            if self.execution != "streamed":
+                raise ValueError(
+                    "a block_fn producer requires execution='streamed'")
+            if shape is None:
+                raise ValueError("program(block_fn, ...) requires shape=(m, n)")
+            return self._program_streamed(a, shape, key)
+        m, n = a.shape
+        if self.execution == "distributed":
+            return self._program_distributed(a, key)
+        at_blocks, da_blocks = crossbar.program_blocks(a, key, self.cfg)
+        return AnalogMatrix(
+            engine=self, shape=(m, n), base_key=key,
+            write_stats=crossbar.matrix_write_cost(m, n, self.cfg),
+            at_blocks=at_blocks, da_blocks=da_blocks)
+
+    def _program_streamed(self, block_fn, shape, key) -> AnalogMatrix:
+        m, n = shape
+        cap_m, cap_n = self.cfg.geom.capacity
+        mb, nb = -(-m // cap_m), -(-n // cap_n)
+        keys = crossbar.block_keys(key, mb, nb)
+
+        def enc(blk, k):
+            k_a, _ = jax.random.split(k)
+            return crossbar.encode_tiled(blk, k_a, self.cfg)
+
+        step = jax.jit(enc)
+        at_rows = [jnp.stack([step(block_fn(i, j), keys[i, j])
+                              for j in range(nb)])
+                   for i in range(mb)]
+        # Only the programmed image is kept resident (the simulated hardware
+        # state); the tier-1 operand dA is re-derived per block at execute
+        # time from the producer, so huge matrices are never held twice.
+        return AnalogMatrix(
+            engine=self, shape=(m, n), base_key=key,
+            write_stats=crossbar.matrix_write_cost(m, n, self.cfg),
+            at_blocks=jnp.stack(at_rows), block_fn=block_fn)
+
+    def _program_distributed(self, a, key) -> AnalogMatrix:
+        from repro.core import distributed as D
+        m, n = a.shape
+        row_spec = self.row_axes if len(self.row_axes) > 1 else self.row_axes[0]
+        a_sh = D.shard_matrix(a, self.mesh, row_spec, self.col_axis)
+        at, da, stats = self._dist_program(a_sh, key)
+        return AnalogMatrix(
+            engine=self, shape=(m, n), base_key=key, write_stats=stats,
+            at_dense=at, da_dense=da)
+
+    def encode_dense(self, a: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """The programmed image of ``a`` as a dense unpadded array.
+
+        Pure jax function of (a, key): safe under jit/vmap (used by
+        :func:`repro.models.rram.program_rram` for stacked layer kernels).
+        """
+        at_blocks, _ = crossbar.program_blocks(a, key, self.cfg)
+        return _assemble(at_blocks, *a.shape)
+
+    # --------------------------------------------------------------- execution
+    def mvm(self, A: AnalogMatrix, x: jnp.ndarray, *,
+            key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Corrected MVM against the programmed image: zero re-encode work.
+
+        ``x``: (n,) or (n, batch).  ``key`` overrides the input-DAC noise key;
+        by default successive calls consume fresh folds of the handle's base
+        key (call 0 reproduces the legacy one-shot draws exactly).
+        """
+        y, _ = self._execute(A, x, key)
+        return y
+
+    def mvm_with_stats(self, A: AnalogMatrix, x: jnp.ndarray, *,
+                       key: Optional[jax.Array] = None
+                       ) -> Tuple[jnp.ndarray, WriteStats]:
+        """Like :meth:`mvm` but also returns this call's input-write cost."""
+        return self._execute(A, x, key, with_stats=True)
+
+    def input_write_stats(self, A: AnalogMatrix, batch: int = 1) -> WriteStats:
+        """Per-execution input-write cost, in the same reporting convention as
+        the handle's ``write_stats`` (distributed: mean across devices, the
+        paper's Figs. 4-5 convention)."""
+        m, n = A.shape
+        if self.execution == "distributed":
+            sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            for ax in self.row_axes:
+                m //= sizes[ax]
+            n //= sizes[self.col_axis]
+        return crossbar.input_write_cost(m, n, self.cfg, batch=batch)
+
+    def _execute(self, A, x, key, with_stats=False):
+        if A.engine is not self and A.engine.cfg != self.cfg:
+            raise ValueError("AnalogMatrix was programmed by an incompatible "
+                             "engine configuration")
+        if self.execution == "distributed":
+            if A.at_dense is None:
+                raise ValueError(
+                    "AnalogMatrix holds block tiles but this engine executes "
+                    "distributed; program it with the distributed engine")
+        elif A.at_blocks is None:
+            raise ValueError(
+                "AnalogMatrix holds mesh-sharded operands but this engine "
+                f"executes {self.execution!r}; program it with this engine")
+        squeeze = x.ndim == 1
+        xb = x[:, None] if squeeze else x
+        if xb.shape[0] != A.n:
+            raise ValueError(
+                f"x has {xb.shape[0]} rows but the programmed matrix is "
+                f"{A.m} x {A.n}")
+        if key is None:
+            # The default key schedule advances Python-side per call; under a
+            # jit trace it would freeze at its trace-time value and every
+            # execution would reuse identical DAC noise -- require an explicit
+            # key there instead of silently correlating the draws.
+            if not getattr(jax.core, "trace_state_clean", lambda: True)():
+                raise ValueError(
+                    "engine.mvm inside jit needs an explicit key= (the "
+                    "default call-counter key schedule is host-side state)")
+            key = A.base_key if A.calls == 0 else \
+                jax.random.fold_in(A.base_key, A.calls)
+        A.calls += 1
+        m, n = A.shape
+        if self.execution == "distributed":
+            p, stats = self._dist_mvm(A.at_dense, A.da_dense, xb, key)
+        else:
+            stats = None
+            if A.da_blocks is None:
+                # Streamed handle: dA is not resident; re-derive per block.
+                p = self._exec_streamed(A, xb, key)
+            elif self.backend == "pallas":
+                if A._padded is None:
+                    mb, nb, cm, cn = A.at_blocks.shape
+                    A._padded = (_assemble(A.at_blocks, mb * cm, nb * cn),
+                                 _assemble(A.da_blocks, mb * cm, nb * cn))
+                p = _exec_pallas(*A._padded, xb, key, cfg=self.cfg, m=m, n=n)
+            else:
+                p = _exec_reference(A.at_blocks, A.da_blocks, xb, key,
+                                    cfg=self.cfg, m=m, n=n)
+        if with_stats and stats is None:
+            stats = crossbar.input_write_cost(m, n, self.cfg, batch=xb.shape[1])
+        return (p[:, 0] if squeeze else p), stats
+
+    def _exec_streamed(self, A, xb, key):
+        """Per-block loop against the resident image: dA = block_fn - A_tilde
+        is formed one capacity block at a time (O(block) extra memory), so the
+        streamed path never holds the source matrix twice."""
+        cfg = self.cfg
+        if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
+            raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
+        m, n = A.shape
+        mb, nb, cap_m, cap_n = A.at_blocks.shape
+        batch = xb.shape[1]
+        x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
+        x_chunks = x_pad.reshape(nb, cap_n, batch)
+        keys = crossbar.block_keys(key, mb, nb)
+        use_kernel = self.backend == "pallas" and cfg.ec
+
+        if self._streamed_step is None:
+            def step(at_blk, a_blk, x_blk, k):
+                _, k_x = jax.random.split(k)
+                x_t = crossbar._encode_vec(x_blk, k_x, cfg) \
+                    if cfg.encode_inputs else x_blk
+                if not cfg.ec:
+                    return at_blk @ x_t
+                da_blk = a_blk - at_blk
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    return kops.rram_ec_matmul(
+                        x_blk.T, x_t.T, at_blk.T, da_blk.T).T
+                if cfg.ec_mode == "faithful":
+                    return at_blk @ x_blk + a_blk @ x_t - at_blk @ x_t
+                return at_blk @ x_blk + da_blk @ x_t
+
+            # Jitted once per engine: execute-many calls reuse the trace.
+            self._streamed_step = jax.jit(step)
+        step = self._streamed_step
+        rows = []
+        for i in range(mb):
+            acc = jnp.zeros((cap_m, batch), jnp.float32)
+            for j in range(nb):
+                acc = acc + step(A.at_blocks[i, j], A.block_fn(i, j),
+                                 x_chunks[j], keys[i, j])
+            rows.append(acc)
+        p = jnp.concatenate(rows, axis=0)[:m]
+        if cfg.ec:
+            p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
+                                     method=cfg.denoise_method)
+        return p

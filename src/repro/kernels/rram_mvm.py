@@ -34,6 +34,18 @@ DEFAULT_BLOCK_M = 256
 DEFAULT_BLOCK_K = 512   # MCA cell rows (contraction)
 DEFAULT_BLOCK_N = 512   # MCA cell cols (output features)
 
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams (and introduced
+# pltpu.InterpretParams); accept either side of the rename so the kernels run
+# on jax 0.4.x and current releases alike.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def _interpret_mode():
+    """Best-available interpret flag for pallas_call on this jax version."""
+    cls = getattr(pltpu, "InterpretParams", None)
+    return cls() if cls is not None else True
+
 
 # --------------------------------------------------------------------------- #
 # encode_matmul: on-the-fly encode + matmul
@@ -98,7 +110,7 @@ def encode_matmul(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, eps)
@@ -108,7 +120,8 @@ def encode_matmul(
 # encode_matmul_rng: encode + matmul with IN-KERNEL noise generation
 # --------------------------------------------------------------------------- #
 
-def _encode_matmul_rng_kernel(seed_ref, x_ref, w_ref, o_ref, *, sigma, levels):
+def _encode_matmul_rng_kernel(seed_ref, x_ref, w_ref, o_ref, *, sigma, levels,
+                              use_prng):
     """Like _encode_matmul_kernel but the programming noise is drawn inside
     the kernel (pltpu PRNG seeded per tile + Box-Muller), so the eps array
     never exists in HBM: the weight tile is read exactly once per MCA
@@ -120,19 +133,25 @@ def _encode_matmul_rng_kernel(seed_ref, x_ref, w_ref, o_ref, *, sigma, levels):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    pltpu.prng_seed(seed_ref[0], i, j, s_)
     w = w_ref[...].astype(jnp.float32)
     scale = jnp.max(jnp.abs(w))
     scale = jnp.where(scale == 0.0, 1.0, scale)
     q = jnp.round(w / scale * (levels - 1)) / (levels - 1) * scale
 
-    # Two uniform draws -> Box-Muller standard normal.
-    bits1 = pltpu.prng_random_bits(w.shape)
-    bits2 = pltpu.prng_random_bits(w.shape)
-    u1 = (bits1.astype(jnp.uint32) >> 8).astype(jnp.float32) / (1 << 24)
-    u2 = (bits2.astype(jnp.uint32) >> 8).astype(jnp.float32) / (1 << 24)
-    u1 = jnp.maximum(u1, 1e-7)
-    eta = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    if use_prng:
+        pltpu.prng_seed(seed_ref[0], i, j, s_)
+        # Two uniform draws -> Box-Muller standard normal.
+        bits1 = pltpu.prng_random_bits(w.shape)
+        bits2 = pltpu.prng_random_bits(w.shape)
+        u1 = (bits1.astype(jnp.uint32) >> 8).astype(jnp.float32) / (1 << 24)
+        u2 = (bits2.astype(jnp.uint32) >> 8).astype(jnp.float32) / (1 << 24)
+        u1 = jnp.maximum(u1, 1e-7)
+        eta = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    else:
+        # Old-jax generic interpreter: pltpu PRNG primitives have no CPU
+        # lowering; match the TPU interpreter's documented semantics
+        # (prng_random_bits stubbed to zeros).
+        eta = jnp.zeros_like(w)
 
     w_tilde = q * (1.0 + sigma * eta)
     x = x_ref[...].astype(jnp.float32)
@@ -170,9 +189,13 @@ def encode_matmul_rng(
     assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0
     grid = (m // block_m, n // block_n, k // block_k)
     if interpret is True:
-        interpret = pltpu.InterpretParams()
+        interpret = _interpret_mode()
+    # The generic (non-TPU) interpreter on old jax cannot lower the pltpu PRNG
+    # primitives; fall back to the zero-noise stub there.
+    use_prng = not (interpret is True and not hasattr(pltpu, "InterpretParams"))
     return pl.pallas_call(
-        functools.partial(_encode_matmul_rng_kernel, sigma=sigma, levels=levels),
+        functools.partial(_encode_matmul_rng_kernel, sigma=sigma, levels=levels,
+                          use_prng=use_prng),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -181,7 +204,7 @@ def encode_matmul_rng(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(seed, x, w)
@@ -242,7 +265,7 @@ def ec_matmul(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, x_tilde, w_tilde, dw)

@@ -22,6 +22,8 @@ import traceback
 from typing import Dict, Optional
 
 import jax
+
+from repro.core.compat import set_mesh
 import jax.numpy as jnp
 
 from repro.analysis.model_flops import model_flops
@@ -56,7 +58,7 @@ def run_lm_cell(arch_name: str, shape_name: str, multi_pod: bool,
                       runtime_kw=runtime_kw, tcfg=tcfg)
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.fn,
                          in_shardings=cell.in_shardings,
                          out_shardings=cell.out_shardings,
@@ -93,7 +95,8 @@ def run_meliso_cell(multi_pod: bool, n: int = 65536,
                     prng: str = "threefry") -> Dict:
     """The paper's own workload: distributed two-tier-EC MVM at 65,536^2."""
     from repro.core import CrossbarConfig, MCAGeometry, get_device
-    from repro.core.distributed import make_distributed_mvm
+    from repro.core.distributed import (make_distributed_program,
+                                        make_distributed_programmed_mvm)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -108,16 +111,25 @@ def run_meliso_cell(multi_pod: bool, n: int = 65536,
     ccfg = CrossbarConfig(device=get_device("taox-hfox"), geom=geom,
                           k_iters=5, ec=ec, ec_mode=ec_mode,
                           denoise_method=denoise)
-    fn = make_distributed_mvm(ccfg, mesh, row_axes, "model")
+    # Lower the full program+execute pipeline (the one-shot serving shape).
+    program = make_distributed_program(ccfg, mesh, row_axes, "model")
+    execute = make_distributed_programmed_mvm(
+        ccfg, mesh, row_axes, "model", stats_include_matrix=True)
+
+    def fn(a, x, key):
+        at, da, _ = program(a, key)
+        return execute(at, da, x, key)
 
     a_abs = jax.ShapeDtypeStruct((n, n), jnp.float32)
     x_abs = jax.ShapeDtypeStruct((n, 1), jnp.float32)
     # prng="rbg": hardware rng-bit-generator -- one pass, no threefry counter
     # arrays (EXPERIMENTS.md Perf M2); threefry is the reproducible default.
-    key_abs = jax.eval_shape(lambda: jax.random.key(0, impl=prng))
+    # "threefry" is accepted as an alias; jax registers it as "threefry2x32".
+    impl = {"threefry": "threefry2x32"}.get(prng, prng)
+    key_abs = jax.eval_shape(lambda: jax.random.key(0, impl=impl))
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(fn).lower(a_abs, x_abs, key_abs)
         t_lower = time.perf_counter() - t0
         t0 = time.perf_counter()

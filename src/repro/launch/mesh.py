@@ -9,12 +9,22 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh"]
+__all__ = ["make_mesh", "make_production_mesh"]
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the jax version has them.
+
+    jax < 0.5 has no ``jax.sharding.AxisType``; meshes there are implicitly
+    Auto, so omitting the argument is the exact equivalent.
+    """
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.compat import shard_map
 from .common import (
     Runtime, attention, attention_specs, cross_entropy_loss, dense,
     embed_spec, init_kv_cache, rmsnorm, rmsnorm_spec, unembed_spec, _k_stencil,
@@ -190,7 +191,7 @@ def moe_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
         jax.tree.map(lambda _: P(None, None, mp), p["wu"]),
         jax.tree.map(lambda _: P(None, mp, None), p["wd"]),
     )
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local, mesh=mesh,
         in_specs=in_specs,
         out_specs=(P(batch_spec, None, None), P()),

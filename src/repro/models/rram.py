@@ -1,7 +1,8 @@
 """Programming a model's linear layers onto the RRAM analog backend.
 
-``program_rram`` walks a parameter pytree; every 2-D linear kernel named "w"
-gains two siblings:
+``program_rram`` is a pytree walk of :meth:`repro.engine.AnalogEngine.program`:
+every 2-D linear kernel named "w" is programmed once onto the engine and gains
+two siblings extracted from the resulting :class:`~repro.engine.AnalogMatrix`:
 
   * ``w_tilde``: the encoded (quantized + programming-noise) conductance image,
     produced by per-(cell_rows x cell_cols)-tile encoding after ``k_iters``
@@ -11,22 +12,24 @@ gains two siblings:
     compression costs ~sigma * 2^-8 relative error, measured in tests).
 
 It also returns the aggregate :class:`WriteStats` for programming the whole
-model -- the analog deployment's one-time write energy/latency, reported by
-the serve benchmarks.  ``program_specs`` is the shape-level twin used by the
-dry-run (no allocation).
+model -- the analog deployment's one-time write energy/latency (matrix writes
+only: per-token input-DAC cost is an execution-time figure under the
+program-once accounting), reported by the serve benchmarks.  ``program_specs``
+is the shape-level twin used by the dry-run (no allocation).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RRAMBackendConfig
-from repro.core.crossbar import CrossbarConfig, encode_tiled, write_cost
+from repro.core.crossbar import CrossbarConfig, matrix_write_cost
 from repro.core.devices import get_device
 from repro.core.virtualization import MCAGeometry
 from repro.core.write_verify import WriteStats
+from repro.engine import AnalogEngine
 from .params import ParamSpec, is_spec, spec
 
 __all__ = ["program_rram", "program_specs", "crossbar_cfg"]
@@ -43,27 +46,23 @@ def crossbar_cfg(cfg: RRAMBackendConfig) -> CrossbarConfig:
     )
 
 
-def _encode_2d(w: jnp.ndarray, key: jax.Array, ccfg: CrossbarConfig) -> jnp.ndarray:
-    """Pad to cell multiples, tile-encode, slice back (fp32 internally)."""
-    r_, c_ = ccfg.geom.cell_rows, ccfg.geom.cell_cols
-    m, n = w.shape
-    mp, np_ = -(-m // r_) * r_, -(-n // c_) * c_
-    wp = jnp.pad(w.astype(jnp.float32), ((0, mp - m), (0, np_ - n)))
-    enc = encode_tiled(wp, key, ccfg)
-    return enc[:m, :n]
-
-
 def program_rram(
     params: Any,
     cfg: RRAMBackendConfig,
     key: jax.Array,
+    *,
+    engine: Optional[AnalogEngine] = None,
 ) -> Tuple[Any, WriteStats]:
     """Return (programmed params, total write stats).
 
-    Works on real or stacked (scan-over-layers) kernels: a kernel of shape
-    (L, d_in, d_out) is encoded per layer via vmap (each layer maps onto its
-    own set of MCA tiles)."""
-    ccfg = crossbar_cfg(cfg)
+    A pytree walk of ``engine.program``: each kernel is written onto the
+    analog engine exactly once; the dense ``w_tilde``/``dw`` operands the
+    layers consume are views of the programmed image.  Works on real or
+    stacked (scan-over-layers) kernels: a kernel of shape (L, d_in, d_out) is
+    encoded per layer via vmap over ``engine.encode_dense`` (each layer maps
+    onto its own set of MCA tiles)."""
+    engine = engine or AnalogEngine(crossbar_cfg(cfg))
+    ccfg = engine.cfg
     total = WriteStats.zero()
     counter = [0]
 
@@ -77,13 +76,14 @@ def program_rram(
                 counter[0] += 1
                 k = jax.random.fold_in(key, counter[0])
                 if sub.ndim == 2:
-                    wt = _encode_2d(sub, k, ccfg)
-                    total = total + write_cost(sub.shape[0], sub.shape[1], ccfg)
+                    handle = engine.program(sub.astype(jnp.float32), k)
+                    wt = handle.a_tilde
+                    total = total + handle.write_stats
                 else:  # stacked layers
                     keys = jax.random.split(k, sub.shape[0])
-                    wt = jax.vmap(lambda w_, k_: _encode_2d(w_, k_, ccfg))(
+                    wt = jax.vmap(engine.encode_dense)(
                         sub.astype(jnp.float32), keys)
-                    per = write_cost(sub.shape[1], sub.shape[2], ccfg)
+                    per = matrix_write_cost(sub.shape[1], sub.shape[2], ccfg)
                     total = total + WriteStats(
                         energy_j=per.energy_j * sub.shape[0],
                         latency_s=per.latency_s * sub.shape[0],

@@ -1,6 +1,9 @@
 """Serving: prefill + greedy decode drivers, with optional RRAM analog
 backend (the paper's technique as a deployment mode -- weights are programmed
-once, per-token MVMs run through the two-tier-EC analog simulation).
+onto an :class:`~repro.engine.AnalogEngine` exactly once at server
+construction; per-token MVMs then run through the two-tier-EC analog
+simulation with zero re-encode work, so decode steps pay only the input-DAC
+cost).
 """
 from __future__ import annotations
 
@@ -11,8 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RRAMBackendConfig
+from repro.engine import AnalogEngine
 from repro.models.common import Runtime
-from repro.models.rram import program_rram
+from repro.models.rram import crossbar_cfg, program_rram
 
 __all__ = ["Server", "greedy_generate"]
 
@@ -24,13 +28,16 @@ class Server:
     params: Any
     rt: Optional[Runtime] = None
     max_len: int = 512
-    write_stats: Any = None     # analog programming cost (rram backend)
+    write_stats: Any = None     # one-time analog programming cost (rram backend)
+    engine: Optional[AnalogEngine] = None   # the programmed analog engine
 
     def __post_init__(self):
         self.rt = self.rt or Runtime()
         if self.rt.rram is not None and self.rt.rram.enabled:
+            self.engine = self.engine or AnalogEngine(crossbar_cfg(self.rt.rram))
             self.params, self.write_stats = program_rram(
-                self.params, self.rt.rram, jax.random.PRNGKey(7))
+                self.params, self.rt.rram, jax.random.PRNGKey(7),
+                engine=self.engine)
         self._prefill = jax.jit(
             lambda p, b: self.mod.prefill(p, b, self.cfg, self.rt, self.max_len))
         self._decode = jax.jit(

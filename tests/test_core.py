@@ -1,12 +1,29 @@
 """Core MELISO+ unit + property tests: devices, write-verify, EC algebra,
-virtualization, crossbar cost model."""
-import hypothesis
-import hypothesis.strategies as st
+virtualization, crossbar cost model.
+
+The property tests use ``hypothesis`` when it is installed and are skipped
+otherwise, so the tier-1 suite collects cleanly on minimal containers."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # pragma: no cover - minimal container
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn
 
 from repro.core import (DEVICES, CrossbarConfig, MCAGeometry, WriteStats,
                         adjustable_mat_write_and_verify,

@@ -25,8 +25,9 @@ PRELUDE = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     import numpy as np
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import set_mesh
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
 """)
 
 
@@ -51,6 +52,38 @@ def test_distributed_mvm_matches_reference():
     assert res["E"] > 0
 
 
+def test_analog_engine_distributed_program_once():
+    """The distributed execution mode behind AnalogEngine: programmed once,
+    executed twice, parity with the legacy one-shot entry point."""
+    res = run_child(PRELUDE + textwrap.dedent("""
+        from repro.core import (CrossbarConfig, MCAGeometry,
+                                distributed_corrected_mvm, get_device, rel_l2)
+        from repro.engine import AnalogEngine
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (256, 256)) / 16
+        x = jax.random.normal(jax.random.fold_in(key, 1), (256,))
+        cfg = CrossbarConfig(device=get_device("taox-hfox"),
+                             geom=MCAGeometry(2, 2, 32, 32), k_iters=5, ec=True)
+        y_legacy, st = distributed_corrected_mvm(a, x, key, cfg, mesh)
+        eng = AnalogEngine(cfg, execution="distributed", mesh=mesh)
+        A = eng.program(a, key)
+        y1, ist = eng.mvm_with_stats(A, x)
+        y2 = A @ x                     # second execution, zero re-programming
+        b = a @ x
+        print(json.dumps({
+            "parity": float(rel_l2(y1, y_legacy)),
+            "err1": float(rel_l2(y1, b)), "err2": float(rel_l2(y2, b)),
+            "E_prog": float(A.write_stats.energy_j),
+            "E_call": float(ist.energy_j), "E_legacy": float(st.energy_j)}))
+    """))
+    assert res["parity"] <= 1e-5
+    assert res["err1"] < 0.1 and res["err2"] < 0.1
+    assert res["E_prog"] > 0 and res["E_call"] > 0
+    # legacy one-shot accounting == program + one input write
+    assert abs(res["E_prog"] + res["E_call"] - res["E_legacy"]) \
+        <= 1e-6 * res["E_legacy"]
+
+
 def test_compressed_psum_and_ring_matmul():
     res = run_child(PRELUDE + textwrap.dedent("""
         from functools import partial
@@ -63,9 +96,10 @@ def test_compressed_psum_and_ring_matmul():
         def red(x):
             out, resid = compressed_psum(x, "data", None)
             return out, resid
-        f = jax.jit(jax.shard_map(red, mesh=mesh,
-                                  in_specs=P(("data",), None),
-                                  out_specs=(P("data", None), P("data", None))))
+        from repro.core.compat import shard_map
+        f = jax.jit(shard_map(red, mesh=mesh,
+                              in_specs=P(("data",), None),
+                              out_specs=(P("data", None), P("data", None))))
         out, resid = f(g)
         # exact sum across the 2 'data' shards:
         exact = g[:4] + g[4:]
@@ -78,9 +112,9 @@ def test_compressed_psum_and_ring_matmul():
             return ring_collective_matmul(xx, ww, "model")
         # the ring result is value-replicated over 'model' but the static vma
         # checker cannot prove it -> check_vma=False
-        rm = jax.jit(jax.shard_map(ring, mesh=mesh,
-                                   in_specs=(P(None, None), P("model", None)),
-                                   out_specs=P(None, None), check_vma=False))
+        rm = jax.jit(shard_map(ring, mesh=mesh,
+                               in_specs=(P(None, None), P("model", None)),
+                               out_specs=P(None, None), check_vma=False))
         y = rm(x, w)
         merr = float(jnp.max(jnp.abs(y - x @ w)))
         print(json.dumps({"int8_err": err, "ring_err": merr}))
@@ -117,7 +151,7 @@ def test_sharded_train_step_matches_single_device():
         psh = jax.tree.map(lambda ps: NamedSharding(mesh, ps),
                            param_pspecs(specs, mesh, "fsdp_tp"))
         prm_s = jax.tree.map(lambda a, s: jax.device_put(a, s), prm, psh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p2, o2, m2 = jax.jit(step)(prm_s, opt, batch)
         print(json.dumps({
             "loss1": float(m1["loss"]), "loss2": float(m2["loss"]),
@@ -147,8 +181,7 @@ def test_elastic_checkpoint_restore():
         with tempfile.TemporaryDirectory() as d:
             ck = CheckpointManager(d)
             ck.save(7, {"params": prm}, blocking=True)
-            mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                                  axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh2 = make_mesh((4, 2), ("data", "model"))
             sh2 = jax.tree.map(lambda ps: NamedSharding(mesh2, ps),
                                param_pspecs(specs, mesh2, "fsdp_tp"))
             restored = ck.restore({"params": prm}, shardings={"params": sh2})
@@ -172,7 +205,7 @@ def test_moe_shard_map_matches_local():
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
         out_local, aux_local = M.moe_apply(lp, x, cfg, Runtime())
         rt = Runtime(mesh=mesh, batch_axes=("data",))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             out_sm, aux_sm = jax.jit(
                 lambda p, xx: M.moe_apply(p, xx, cfg, rt))(lp, x)
         err = float(jnp.max(jnp.abs(out_local - out_sm)))

@@ -1,0 +1,279 @@
+"""Program-once / execute-many AnalogEngine tests.
+
+Covers the ISSUE acceptance criteria: a programmed AnalogMatrix is encoded
+exactly once (counted via a monkeypatched ``encode_tiled``), engine output
+matches the legacy one-shot ``corrected_mvm`` (and a from-scratch
+reimplementation of the seed algorithm) under the same key, batched and
+single-vector execution agree, streamed and dense programming are equivalent,
+and all execution modes / backends run behind the one interface.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm,
+                        denoise_least_square, first_order_correct, get_device,
+                        rel_l2)
+from repro.core import crossbar
+from repro.engine import AnalogEngine, AnalogMatrix
+
+KEY = jax.random.PRNGKey(7)
+GEOM = MCAGeometry(tile_rows=2, tile_cols=2, cell_rows=32, cell_cols=32)
+
+
+def make_cfg(**kw):
+    base = dict(device=get_device("taox-hfox"), geom=GEOM, k_iters=5, ec=True)
+    base.update(kw)
+    return CrossbarConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    a = jax.random.normal(KEY, (100, 90)) / 10
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (90,))
+    return a, x
+
+
+# ----------------------------------------------------------- program-once
+def test_program_encodes_exactly_once(problem, monkeypatch):
+    """Two successive mvm calls on one handle do zero additional encode work."""
+    a, x = problem
+    calls = {"n": 0}
+    real_encode = crossbar.encode_tiled
+
+    def counting_encode(*args, **kw):
+        calls["n"] += 1
+        return real_encode(*args, **kw)
+
+    monkeypatch.setattr(crossbar, "encode_tiled", counting_encode)
+    engine = AnalogEngine(make_cfg())
+    A = engine.program(a, KEY)
+    programmed = calls["n"]
+    assert programmed > 0                       # programming does encode
+    y1 = engine.mvm(A, x)
+    y2 = engine.mvm(A, x)
+    assert calls["n"] == programmed             # executing never re-encodes
+    # successive calls draw fresh input-DAC noise, so outputs differ slightly
+    assert bool(jnp.any(y1 != y2))
+
+
+def test_program_deterministic_under_fixed_key(problem):
+    a, _ = problem
+    engine = AnalogEngine(make_cfg())
+    A1 = engine.program(a, KEY)
+    A2 = engine.program(a, KEY)
+    np.testing.assert_array_equal(np.asarray(A1.at_blocks),
+                                  np.asarray(A2.at_blocks))
+    np.testing.assert_array_equal(np.asarray(A1.da_blocks),
+                                  np.asarray(A2.da_blocks))
+    assert bool(jnp.any(
+        engine.program(a, jax.random.fold_in(KEY, 9)).at_blocks
+        != A1.at_blocks))
+
+
+def test_a_tilde_reconstructs_matrix(problem):
+    a, _ = problem
+    engine = AnalogEngine(make_cfg())
+    A = engine.program(a, KEY)
+    assert A.a_tilde.shape == a.shape
+    np.testing.assert_allclose(np.asarray(A.a_tilde + A.da), np.asarray(a),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- parity
+def _seed_reference_mvm(a, x, key, cfg):
+    """The seed repo's one-shot algorithm, reimplemented verbatim: per-block
+    encode of A and x inside the same vmap structure, fused tier-1, tier-2."""
+    m, n = a.shape
+    cap_m, cap_n = cfg.geom.capacity
+    from repro.core.virtualization import zero_padding
+    a_pad = zero_padding(a, cfg.geom)
+    mp, np_ = a_pad.shape
+    x_pad = jnp.pad(x[:, None], ((0, np_ - n), (0, 0)))
+    mb, nb = mp // cap_m, np_ // cap_n
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+    x_chunks = x_pad.reshape(nb, cap_n, 1)
+    keys = jax.random.split(key, mb * nb).reshape(mb, nb, -1)
+
+    def per_row(i_blocks, i_keys):
+        def per_col(a_blk, x_blk, k):
+            k_a, k_x = jax.random.split(k)
+            a_t = crossbar.encode_tiled(a_blk, k_a, cfg)
+            x_t = crossbar._encode_vec(x_blk, k_x, cfg)
+            return first_order_correct(a_blk, a_t, x_blk, x_t, mode="fused")
+        return jnp.sum(jax.vmap(per_col)(i_blocks, x_chunks, i_keys), axis=0)
+
+    y_blocks = jax.vmap(per_row)(blocks, keys)
+    p = y_blocks.reshape(mb * cap_m, 1)[:m]
+    p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+    return p[:, 0]
+
+
+def test_mvm_matches_legacy_corrected_mvm(problem):
+    """<= 1e-5 rel-L2 against both the legacy entry point and a from-scratch
+    reimplementation of the seed algorithm, same key/config."""
+    a, x = problem
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg)
+    y_eng = engine.mvm(engine.program(a, KEY), x)
+    y_leg, _ = corrected_mvm(a, x, KEY, cfg)
+    y_seed = _seed_reference_mvm(a, x, KEY, cfg)
+    assert float(rel_l2(y_eng, y_leg)) <= 1e-5
+    assert float(rel_l2(y_eng, y_seed)) <= 1e-5
+
+
+@pytest.mark.parametrize("ec,encode_inputs", [(True, True), (False, True),
+                                              (True, False)])
+def test_mvm_config_paths(problem, ec, encode_inputs):
+    a, x = problem
+    cfg = make_cfg(ec=ec, encode_inputs=encode_inputs)
+    engine = AnalogEngine(cfg)
+    y_eng = engine.mvm(engine.program(a, KEY), x)
+    y_leg, _ = corrected_mvm(a, x, KEY, cfg)
+    assert float(rel_l2(y_eng, y_leg)) <= 1e-5
+
+
+# ------------------------------------------------------------------ batching
+def test_single_vector_equals_one_column_batch(problem):
+    a, x = problem
+    engine = AnalogEngine(make_cfg())
+    A = engine.program(a, KEY)
+    y1 = engine.mvm(A, x, key=KEY)
+    yb = engine.mvm(A, x[:, None], key=KEY)
+    assert yb.shape == (a.shape[0], 1)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(yb[:, 0]))
+
+
+def test_batched_columns_each_accurate(problem):
+    a, x = problem
+    engine = AnalogEngine(make_cfg())
+    A = engine.program(a, KEY)
+    xb = jnp.stack([x, -2.0 * x, 0.5 * x], axis=1)
+    yb = engine.mvm(A, xb)
+    truth = a @ xb
+    for j in range(xb.shape[1]):
+        assert float(rel_l2(yb[:, j], truth[:, j])) < 5e-2
+
+
+# ------------------------------------------------------- streamed execution
+def test_streamed_equals_dense(problem):
+    """Same key => identical encode draws => streamed == local to fp tol."""
+    a, x = problem
+    cfg = make_cfg()
+    m, n = a.shape
+    cap_m, cap_n = cfg.geom.capacity
+    mb, nb = -(-m // cap_m), -(-n // cap_n)
+    a_pad = jnp.pad(a, ((0, mb * cap_m - m), (0, nb * cap_n - n)))
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+
+    dense = AnalogEngine(cfg)
+    streamed = AnalogEngine(cfg, execution="streamed")
+    A_d = dense.program(a, KEY)
+    A_s = streamed.program(lambda i, j: blocks[i, j], KEY, shape=(m, n))
+    # Same keys => same draws; XLA may reassociate the per-tile quantization
+    # scale reduction between the vmapped and per-block paths, so compare in
+    # norm rather than elementwise.
+    assert float(rel_l2(A_s.at_blocks, A_d.at_blocks)) <= 1e-5
+    y_d = dense.mvm(A_d, x, key=KEY)
+    y_s = streamed.mvm(A_s, x, key=KEY)
+    assert float(rel_l2(y_s, y_d)) <= 1e-5
+
+
+def test_streamed_keeps_only_the_programmed_image(problem):
+    """Streamed handles hold A_tilde tiles + the producer, never dA tiles."""
+    a, x = problem
+    cfg = make_cfg()
+    m, n = a.shape
+    cap_m, cap_n = cfg.geom.capacity
+    mb, nb = -(-m // cap_m), -(-n // cap_n)
+    a_pad = jnp.pad(a, ((0, mb * cap_m - m), (0, nb * cap_n - n)))
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(lambda i, j: blocks[i, j], KEY, shape=(m, n))
+    assert A.da_blocks is None and A.block_fn is not None
+    # the dense views still reconstruct the matrix
+    np.testing.assert_allclose(np.asarray(A.a_tilde + A.da), np.asarray(a),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cross_execution_handle_rejected(problem):
+    a, _ = problem
+    local = AnalogEngine(make_cfg())
+    A = local.program(a, KEY)
+    streamed = AnalogEngine(make_cfg(), execution="streamed")
+    # a local handle on a streamed engine is fine (same block layout) ...
+    assert streamed.mvm(A, jnp.ones((a.shape[1],))).shape == (a.shape[0],)
+    # ... but a blocks-layout handle must be rejected by a distributed engine
+    # before it reaches shard_map with None operands.
+    dist = AnalogEngine.__new__(AnalogEngine)
+    dist.cfg, dist.execution, dist.backend = make_cfg(), "distributed", "reference"
+    with pytest.raises(ValueError):
+        dist._execute(A, jnp.ones((a.shape[1],)), None)
+
+
+def test_streamed_requires_shape(problem):
+    engine = AnalogEngine(make_cfg(), execution="streamed")
+    with pytest.raises(ValueError):
+        engine.program(lambda i, j: jnp.zeros((64, 64)), KEY)
+    with pytest.raises(ValueError):
+        AnalogEngine(make_cfg()).program(
+            lambda i, j: jnp.zeros((64, 64)), KEY, shape=(64, 64))
+
+
+# -------------------------------------------------------------- pallas backend
+def test_pallas_backend_accuracy(problem):
+    a, x = problem
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg, backend="pallas")
+    A = engine.program(a, KEY)
+    y = engine.mvm(A, x)
+    ref = AnalogEngine(cfg)
+    y_ref = ref.mvm(ref.program(a, KEY), x)
+    b = a @ x
+    # Different input-DAC draw structure (one pass vs per-block), so compare
+    # statistically: the kernel path must reach the same EC accuracy class.
+    assert float(rel_l2(y, b)) < 3.0 * float(rel_l2(y_ref, b)) + 1e-3
+
+
+# ----------------------------------------------------------------- ergonomics
+def test_matmul_operator_and_stats(problem):
+    a, x = problem
+    engine = AnalogEngine(make_cfg())
+    A = engine.program(a, KEY)
+    y = A @ x
+    assert y.shape == (a.shape[0],)
+    assert float(A.write_stats.energy_j) > 0
+    y2, call_stats = engine.mvm_with_stats(A, x)
+    assert float(call_stats.energy_j) > 0
+    # program-once: per-call input cost excludes the matrix write
+    assert float(call_stats.energy_j) < float(A.write_stats.energy_j) * 10
+    # legacy one-shot accounting == program + one input write
+    _, legacy_stats = corrected_mvm(a, x, KEY, make_cfg())
+    total = float(A.write_stats.energy_j) + float(call_stats.energy_j)
+    np.testing.assert_allclose(total, float(legacy_stats.energy_j), rtol=1e-6)
+
+
+def test_engine_validates_arguments():
+    with pytest.raises(ValueError):
+        AnalogEngine(make_cfg(), execution="nope")
+    with pytest.raises(ValueError):
+        AnalogEngine(make_cfg(), backend="nope")
+    with pytest.raises(ValueError):
+        AnalogEngine(make_cfg(), execution="distributed")   # mesh required
+
+
+def test_batch_write_cost_scales(problem):
+    """The satellite fix: input write cost must track the real batch size."""
+    a, _ = problem
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg)
+    A = engine.program(a, KEY)
+    e1 = float(A.input_write_stats(batch=1).energy_j)
+    e4 = float(A.input_write_stats(batch=4).energy_j)
+    np.testing.assert_allclose(e4, 4.0 * e1, rtol=1e-6)
+    # and the legacy shim now passes the real batch through
+    x4 = jax.random.normal(KEY, (a.shape[1], 4))
+    _, s4 = corrected_mvm(a, x4, KEY, cfg)
+    _, s1 = corrected_mvm(a, x4[:, :1], KEY, cfg)
+    assert float(s4.energy_j) > float(s1.energy_j)

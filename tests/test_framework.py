@@ -120,8 +120,8 @@ def test_sharding_rules_divisibility():
 def test_cache_pspecs_heuristic():
     from repro.distributed.sharding import cache_pspecs
     import jax.sharding as jsh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     tree = {"k": jax.ShapeDtypeStruct((24, 128, 32768, 8, 128), jnp.bfloat16),
             "len": jax.ShapeDtypeStruct((), jnp.int32)}
     specs = cache_pspecs(tree, mesh, global_batch=128)

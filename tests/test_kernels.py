@@ -26,6 +26,7 @@ def rand(shape, dtype, i):
     (8, 48, 16, 8, 16, 8),      # multi-step K accumulation
     (24, 24, 40, 8, 8, 8),
 ])
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_encode_matmul_sweep(m, k, n, bm, bk, bn, dtype):
     x = rand((m, k), dtype, 0)
@@ -50,6 +51,7 @@ def test_encode_matmul_levels(levels):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 40, 24), (32, 16, 48)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ec_matmul_sweep(m, k, n, dtype):
@@ -76,6 +78,7 @@ def test_ec_matmul_unpadded_shapes():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n,b,bb", [(16, 8, 8), (64, 16, 8), (128, 8, 8), (33, 5, 8)])
 @pytest.mark.parametrize("lam", [1e-12, 1e-3, 0.5])
 def test_thomas_sweep(n, b, bb, lam):
