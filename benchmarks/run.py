@@ -23,10 +23,12 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import lm_step, strong_scaling, table1_ec, weak_scaling, writeverify_sweep
+    from . import (lm_step, solver_convergence, strong_scaling, table1_ec,
+                   weak_scaling, writeverify_sweep)
     modules = [
         ("table1_ec", table1_ec),
         ("writeverify_sweep", writeverify_sweep),
+        ("solver_convergence", solver_convergence),
         ("weak_scaling", weak_scaling),
         ("strong_scaling", strong_scaling),
         ("lm_step", lm_step),

@@ -42,6 +42,7 @@ _GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 _CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
                       r"(?:\{)?%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
 
 _ZERO_OPS = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -130,8 +131,15 @@ def _parse_computations(text: str) -> Tuple[Dict[str, List[_Instr]], Optional[st
             continue
         m = _INSTR_RE.match(line)
         if m:
-            ops = [o.strip().lstrip("%") for o in m.group("operands").split(",")
-                   if o.strip()]
+            # Operands print either bare (%name, %other) or typed
+            # (f32[64,64]{1,0} %name, ...) depending on the XLA version; typed
+            # shapes contain commas, so split-on-comma keeps the shape glued to
+            # the name and every symtab lookup misses (dots then fall back to
+            # contract=1 -- a silent 2*K flop undercount).  Pull the %names
+            # directly when present.
+            otxt = m.group("operands")
+            ops = _OPERAND_NAME_RE.findall(otxt) or [
+                o.strip() for o in otxt.split(",") if o.strip()]
             comps[cur].append(_Instr(
                 name=m.group("name"), shape=m.group("shape"),
                 op=m.group("op"), operands=ops, attrs=m.group("attrs"),

@@ -45,6 +45,25 @@ Usage::
 The legacy one-shot entry points (``corrected_mvm``,
 ``streamed_corrected_mvm``, ``distributed_corrected_mvm``) remain as thin
 deprecation shims over the same two-stage dataflow.
+
+Solver entry points
+-------------------
+
+:mod:`repro.solvers` builds iterative linear solves on top of this engine --
+the workload the program-once model exists for (MELISO+ is an in-memory
+linear SOlver).  Every method touches the programmed image only through
+``engine.mvm``, so it works across all execution modes and backends::
+
+    from repro import solvers
+    A = engine.program(a, key)                  # one-time write
+    solvers.cg(A, b, tol=1e-4)                  # SPD Krylov solve
+    solvers.richardson(A, b)                    # auto-omega stationary solve
+    solvers.gmres(A, b); solvers.bicgstab(A, b) # general matrices
+    solvers.refine(A, b)                        # analog inner + digital outer
+
+Each returns a :class:`~repro.solvers.SolveResult` whose ledger splits energy
+into this handle's one-time ``write_stats`` and the accumulated per-MVM
+``input_write_stats`` -- the amortization curve of Figs. 4-5.
 """
 from __future__ import annotations
 
@@ -366,9 +385,19 @@ class AnalogEngine:
             elif self.backend == "pallas":
                 if A._padded is None:
                     mb, nb, cm, cn = A.at_blocks.shape
-                    A._padded = (_assemble(A.at_blocks, mb * cm, nb * cn),
-                                 _assemble(A.da_blocks, mb * cm, nb * cn))
-                p = _exec_pallas(*A._padded, xb, key, cfg=self.cfg, m=m, n=n)
+                    padded = (_assemble(A.at_blocks, mb * cm, nb * cn),
+                              _assemble(A.da_blocks, mb * cm, nb * cn))
+                    # Only cache outside a trace: caching mid-trace would pin
+                    # tracers on the handle and leak them into later calls
+                    # (e.g. a solver's while_loop executing many MVMs).  If
+                    # this jax has no trace_state_clean, skip caching -- the
+                    # safe direction is recompute, never cache a maybe-tracer.
+                    if getattr(jax.core, "trace_state_clean",
+                               lambda: False)():
+                        A._padded = padded
+                else:
+                    padded = A._padded
+                p = _exec_pallas(*padded, xb, key, cfg=self.cfg, m=m, n=n)
             else:
                 p = _exec_reference(A.at_blocks, A.da_blocks, xb, key,
                                     cfg=self.cfg, m=m, n=n)

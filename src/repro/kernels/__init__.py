@@ -6,6 +6,8 @@ from .ops import (
     on_cpu,
     rram_ec_matmul,
     rram_encode_matmul,
+    solver_cg_update,
+    solver_richardson_update,
 )
 
 __all__ = [
@@ -14,4 +16,6 @@ __all__ = [
     "on_cpu",
     "rram_ec_matmul",
     "rram_encode_matmul",
+    "solver_cg_update",
+    "solver_richardson_update",
 ]

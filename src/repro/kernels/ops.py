@@ -17,6 +17,8 @@ from . import ref as kref
 from .rram_mvm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N
 from .rram_mvm import ec_matmul as _ec_matmul
 from .rram_mvm import encode_matmul as _encode_matmul
+from .solver_update import cg_update as _cg_update
+from .solver_update import richardson_update as _richardson_update
 from .tridiag import stencil_denoise as _stencil
 from .tridiag import thomas_solve as _thomas
 
@@ -26,6 +28,8 @@ __all__ = [
     "rram_ec_matmul",
     "denoise_thomas",
     "denoise_stencil",
+    "solver_richardson_update",
+    "solver_cg_update",
 ]
 
 
@@ -97,6 +101,36 @@ def rram_ec_matmul(
         xp, xtp, wtp, dwp, block_m=bm, block_k=bk, block_n=bn,
         interpret=on_cpu() if interpret is None else interpret)
     return out[:m, :n]
+
+
+def solver_richardson_update(
+    x: jnp.ndarray, b: jnp.ndarray, y: jnp.ndarray, omega,
+    *, block_n: int = 256, interpret: bool | None = None,
+):
+    """Fused solver step (x + omega*(b - y), b - y) for (n, batch) panels."""
+    n, bt = x.shape
+    bn = min(block_n, max(1, n))
+    pad = (-n) % bn
+    xp, bp, yp = (_pad_to(a, (bn, 1)) for a in (x, b, y))
+    xn, r = _richardson_update(
+        xp, bp, yp, jnp.asarray(omega), block_n=bn,
+        interpret=on_cpu() if interpret is None else interpret)
+    return (xn[:n], r[:n]) if pad else (xn, r)
+
+
+def solver_cg_update(
+    x: jnp.ndarray, r: jnp.ndarray, p: jnp.ndarray, ap: jnp.ndarray, alpha,
+    *, block_n: int = 256, interpret: bool | None = None,
+):
+    """Fused CG twin-axpy (x + alpha*p, r - alpha*ap), alpha per RHS column."""
+    n, bt = x.shape
+    bn = min(block_n, max(1, n))
+    pad = (-n) % bn
+    xp, rp, pp, app = (_pad_to(a, (bn, 1)) for a in (x, r, p, ap))
+    xn, rn = _cg_update(
+        xp, rp, pp, app, jnp.asarray(alpha), block_n=bn,
+        interpret=on_cpu() if interpret is None else interpret)
+    return (xn[:n], rn[:n]) if pad else (xn, rn)
 
 
 def denoise_thomas(

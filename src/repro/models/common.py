@@ -9,6 +9,7 @@ the analog backend (the paper's technique) without model-specific code.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -145,18 +146,51 @@ def layernorm(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     return out.astype(x.dtype)
 
 
-def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: (..., T, H, Dh); positions: (..., T) int32."""
-    dh = x.shape[-1]
+def _rope_trig(positions: jnp.ndarray, theta: float, dh: int):
+    """Full-width (Dh) cos / signed-sin tables, built from iota -- never by
+    concatenating computed half-width arrays (see :func:`rope`)."""
     half = dh // 2
-    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
-    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., T, half)
-    cos = jnp.cos(ang)[..., None, :]                                 # (..., T, 1, half)
-    sin = jnp.sin(ang)[..., None, :]
-    x1, x2 = x[..., :half], x[..., half:]
-    out = jnp.concatenate(
-        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    idx = jnp.arange(dh, dtype=jnp.int32)
+    freqs = 1.0 / (theta ** ((idx % half).astype(jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., T, Dh)
+    sign = jnp.where(idx < half, -1.0, 1.0)
+    return jnp.cos(ang)[..., None, :], (sign * jnp.sin(ang))[..., None, :]
+
+
+def _rope_apply(x: jnp.ndarray, cos2: jnp.ndarray, sin2: jnp.ndarray):
+    half = x.shape[-1] // 2
+    rot = jnp.concatenate([x[..., half:], x[..., :half]], axis=-1)
+    return x * cos2 + rot * sin2
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, Dh); positions: (..., T) int32.
+
+    Rotate-half form: the raw halves of ``x`` are concatenated *before* any
+    arithmetic and the rotation runs on full-width (Dh) arrays, with the
+    backward pass (a rotation by ``-theta``) spelled the same way via
+    ``custom_vjp``.  The textbook ``concat(x1*cos - x2*sin, x2*cos + x1*sin)``
+    -- compute on sliced halves, then concatenate -- is bit-identical in IEEE
+    arithmetic but is miscompiled by the GSPMD partitioner when the head dim
+    arrives sharded (e.g. wk sharded over 'model' propagates into Dh),
+    silently producing wrong values; jax's auto-derived rope VJP contains the
+    same unsafe pattern.  Only raw slices may feed a concatenate here.
+    """
+    cos2, sin2 = _rope_trig(positions, theta, x.shape[-1])
+    return _rope_apply(x, cos2, sin2).astype(x.dtype)
+
+
+def _rope_fwd(x, positions, theta):
+    return rope(x, positions, theta), positions
+
+
+def _rope_bwd(theta, positions, g):
+    cos2, sin2 = _rope_trig(positions, theta, g.shape[-1])
+    return (_rope_apply(g, cos2, -sin2).astype(g.dtype), None)
+
+
+rope.defvjp(_rope_fwd, _rope_bwd)
 
 
 def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:

@@ -1,0 +1,41 @@
+"""Analog iterative linear solvers on top of the program-once AnalogEngine.
+
+MELISO+ is an In-Memory Linear SOlver: program a matrix image once, then
+amortize the write cost over the many corrected MVMs of an iterative solve.
+This package turns any :class:`~repro.engine.AnalogMatrix` (or dense array,
+or bare matvec) into ``A x = b`` solutions:
+
+  * :mod:`~repro.solvers.stationary` -- Richardson (auto-``omega`` from a
+    matvec-only power-iteration spectral estimate) and Jacobi;
+  * :mod:`~repro.solvers.krylov` -- CG (SPD), BiCGSTAB and restarted GMRES(m);
+  * :mod:`~repro.solvers.refinement` -- mixed-precision iterative refinement
+    (analog inner solve, digital fp32 exact-residual outer loop);
+  * :mod:`~repro.solvers.base` -- :class:`SolveResult` with per-iteration
+    residual history and a :class:`SolveLedger` splitting energy/latency into
+    the one-time programming cost and the per-iteration input-write cost.
+
+Every method is matvec-only, supports multi-RHS batching ``(n, batch)``, jits
+end-to-end (``lax.while_loop`` early stopping), and runs unchanged across the
+engine's ``local`` / ``streamed`` / ``distributed`` execution modes and
+``reference`` / ``pallas`` backends (``backend="pallas"`` additionally fuses
+the solver update steps into Pallas kernels).
+
+Quickstart::
+
+    from repro import solvers
+    A = engine.program(a, key)              # one-time write cost
+    res = solvers.cg(A, b, tol=1e-4)        # matvec-only analog solve
+    res.x, res.residuals, res.iterations
+    res.ledger.write_energy_j               # paid once
+    res.ledger.iteration_energy_j           # mvms x input-write cost
+"""
+from .base import LinearOperator, SolveLedger, SolveResult, as_operator
+from .krylov import bicgstab, cg, gmres
+from .refinement import refine
+from .stationary import estimate_omega, jacobi, richardson, spectral_bounds
+
+__all__ = [
+    "LinearOperator", "SolveLedger", "SolveResult", "as_operator",
+    "bicgstab", "cg", "gmres", "refine",
+    "estimate_omega", "jacobi", "richardson", "spectral_bounds",
+]

@@ -1,0 +1,238 @@
+"""Solver-layer plumbing: operators, results, and the energy/latency ledger.
+
+MELISO+ is an in-memory *linear solver*: the regime that pays for programming
+an RRAM image once is hundreds of matvecs against it (the companion PDHG paper
+runs exactly this loop).  This module is the contract between the iterative
+methods (:mod:`stationary`, :mod:`krylov`, :mod:`refinement`) and whatever
+supplies the matvec:
+
+  * :func:`as_operator` adapts an :class:`~repro.engine.AnalogMatrix` (noisy,
+    error-corrected analog MVM + real write-cost accounting), a dense
+    ``jnp.ndarray`` (exact digital matvec, zero analog cost -- the oracle used
+    in tests), or a bare ``matvec(v, key)`` callable into one
+    :class:`LinearOperator` interface.  Every solver is matvec-only, so the
+    same code runs unchanged against ``local``, ``streamed`` and
+    ``distributed`` execution and both engine backends.
+  * :class:`SolveResult` is what every solver returns: the solution, the
+    per-iteration relative-residual history, convergence info, and a
+    :class:`SolveLedger` splitting energy/latency into the one-time
+    programming cost (``write_stats``, paid at ``engine.program``) and the
+    per-iteration input-write cost (one x DAC pass + EC X^T replica per MVM).
+
+Key discipline: each analog MVM inside a solve consumes ``fold_in(key, i)``
+for a global matvec counter ``i``, so a solve is reproducible given its base
+key and two solvers issued the same draws never correlate across iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.write_verify import WriteStats
+from repro.engine import AnalogMatrix
+
+__all__ = [
+    "LinearOperator", "SolveLedger", "SolveResult", "as_operator",
+    "col_norms", "init_history", "use_pallas",
+]
+
+_TINY = 1e-30
+
+
+def use_pallas(backend: Optional[str]) -> bool:
+    """Validate a solver ``backend=`` switch (None -> reference path)."""
+    if backend is None:
+        return False
+    if backend not in ("reference", "pallas"):
+        raise ValueError(f"unknown solver backend {backend!r}")
+    return backend == "pallas"
+
+
+def col_norms(v: jnp.ndarray) -> jnp.ndarray:
+    """Column-wise l2 norms of an (n, batch) panel -> (batch,)."""
+    return jnp.sqrt(jnp.sum(jnp.square(v), axis=0))
+
+
+def init_history(maxiter: int, batch: int) -> jnp.ndarray:
+    """NaN-filled (maxiter, batch) relative-residual history; iterations that
+    never run stay NaN so plots/tests can distinguish 'converged early'."""
+    return jnp.full((maxiter, batch), jnp.nan, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearOperator:
+    """Matvec-only view of a (square or rectangular) matrix.
+
+    ``matvec(v, key)`` maps (n, batch) -> (m, batch); ``key`` seeds the input
+    DAC noise of an analog execution and is ignored by digital operators.
+    """
+
+    matvec: Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
+    shape: Tuple[int, int]
+    write_stats: WriteStats                      # one-time programming cost
+    input_stats: Callable[[int], WriteStats]     # per-MVM cost, fn of batch
+    dense: Optional[Callable[[], jnp.ndarray]]   # digital reconstruction
+    analog: bool
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+
+def _zero_stats(_batch: int = 1) -> WriteStats:
+    return WriteStats.zero()
+
+
+def as_operator(
+    A: Union[AnalogMatrix, jnp.ndarray, Callable],
+    *,
+    shape: Optional[Tuple[int, int]] = None,
+) -> LinearOperator:
+    """Adapt ``A`` into a :class:`LinearOperator`.
+
+    ``A`` may be an :class:`AnalogMatrix` handle (programmed once; each matvec
+    is a corrected analog execution whose input-write cost lands in the
+    ledger), a dense array (exact digital matvec, zero ledger), or a callable
+    ``matvec(v, key)`` with ``shape=(m, n)``.
+    """
+    if isinstance(A, LinearOperator):
+        return A
+    if isinstance(A, AnalogMatrix):
+        eng = A.engine
+        return LinearOperator(
+            matvec=lambda v, k: eng.mvm(A, v, key=k),
+            shape=A.shape,
+            write_stats=A.write_stats,
+            input_stats=lambda batch: eng.input_write_stats(A, batch),
+            dense=lambda: A.a_tilde + A.da,
+            analog=True,
+        )
+    if callable(A) and not hasattr(A, "shape"):
+        if shape is None:
+            raise ValueError("as_operator(matvec, ...) requires shape=(m, n)")
+        return LinearOperator(matvec=A, shape=tuple(shape),
+                              write_stats=WriteStats.zero(),
+                              input_stats=_zero_stats, dense=None,
+                              analog=False)
+    a = jnp.asarray(A)
+    if a.ndim != 2:
+        raise ValueError(f"expected a matrix, got shape {a.shape}")
+    return LinearOperator(matvec=lambda v, _k: a @ v, shape=a.shape,
+                          write_stats=WriteStats.zero(),
+                          input_stats=_zero_stats, dense=lambda: a,
+                          analog=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveLedger:
+    """Energy/latency split of one solve under the program-once model.
+
+    ``write_stats`` is the one-time conductance-image programming cost (zero
+    for digital operators); ``input_stats`` is the cost of ONE analog MVM's
+    input writes (x DAC pass + EC X^T replica, scaling with the RHS batch);
+    ``mvms`` counts the full-batch analog MVMs the solve executed.  Setup
+    MVMs that run on a single column regardless of the RHS batch (the
+    power-iteration spectral estimate) are billed separately as
+    ``mvms_single`` at the ``input_stats_single`` (batch=1) rate, so the
+    amortized totals are ``write + mvms*input + mvms_single*input_single``.
+    """
+
+    write_stats: WriteStats
+    input_stats: WriteStats
+    mvms: int
+    input_stats_single: Optional[WriteStats] = None
+    mvms_single: int = 0
+
+    @property
+    def write_energy_j(self) -> float:
+        return float(self.write_stats.energy_j)
+
+    @property
+    def iteration_energy_j(self) -> float:
+        single = self.input_stats_single or self.input_stats
+        return (float(self.input_stats.energy_j) * self.mvms
+                + float(single.energy_j) * self.mvms_single)
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.write_energy_j + self.iteration_energy_j
+
+    @property
+    def total_latency_s(self) -> float:
+        single = self.input_stats_single or self.input_stats
+        return (float(self.write_stats.latency_s)
+                + float(self.input_stats.latency_s) * self.mvms
+                + float(single.latency_s) * self.mvms_single)
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """What every solver in :mod:`repro.solvers` returns.
+
+    ``residuals`` is the per-iteration relative residual ``||r_k|| / ||b||``,
+    shaped (maxiter,) for a vector RHS or (maxiter, batch) for multi-RHS;
+    entries past ``iterations`` are NaN.  For restarted GMRES one "iteration"
+    is one restart cycle.
+    """
+
+    x: jnp.ndarray
+    residuals: jnp.ndarray
+    iterations: int
+    converged: bool
+    ledger: SolveLedger
+    solver: str
+
+    @property
+    def final_residual(self) -> float:
+        """Worst-column relative residual at the last recorded iteration."""
+        r = self.residuals if self.residuals.ndim == 2 \
+            else self.residuals[:, None]
+        last = jnp.nanmax(jnp.where(jnp.isnan(r), -jnp.inf, r), axis=1)
+        idx = max(self.iterations - 1, 0)
+        return float(last[idx])
+
+    def __repr__(self) -> str:  # keep large arrays out of logs
+        m, b = (self.residuals.shape + (1,))[:2]
+        return (f"SolveResult(solver={self.solver!r}, n={self.x.shape[0]}, "
+                f"batch={b}, iterations={self.iterations}, "
+                f"converged={self.converged}, "
+                f"final_residual={self.final_residual:.3e}, "
+                f"mvms={self.ledger.mvms}, "
+                f"energy_j={self.ledger.total_energy_j:.3e})")
+
+
+def pack_result(
+    op: LinearOperator,
+    solver: str,
+    x: jnp.ndarray,
+    hist: jnp.ndarray,
+    iterations,
+    mvms,
+    tol: float,
+    squeeze: bool,
+    mvms_single: int = 0,
+) -> SolveResult:
+    """Assemble a :class:`SolveResult` from a jitted core's raw outputs.
+
+    ``mvms`` are full-batch solve MVMs; ``mvms_single`` are batch-1 setup
+    MVMs (spectral estimates), billed at the batch-1 input-write rate.
+    """
+    batch = x.shape[1]
+    iterations = int(iterations)
+    res = SolveResult(
+        x=x[:, 0] if squeeze else x,
+        residuals=hist[:, 0] if squeeze else hist,
+        iterations=iterations,
+        converged=False,
+        ledger=SolveLedger(write_stats=op.write_stats,
+                           input_stats=op.input_stats(batch),
+                           mvms=int(mvms),
+                           input_stats_single=op.input_stats(1),
+                           mvms_single=int(mvms_single)),
+        solver=solver,
+    )
+    res.converged = iterations > 0 and res.final_residual <= tol
+    return res

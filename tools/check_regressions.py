@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""CI regression gate: fail on *new* test failures, not pre-existing ones.
+
+Runs pytest with the given arguments, collects failing test ids from the
+junit XML, and compares them against the allowlist in
+``tests/known_failures.txt`` (one ``path::testid`` per line, ``#`` comments).
+Exit code is non-zero only when a failure is NOT on the allowlist, so a
+known-bad test never masks a fresh regression -- and stale allowlist entries
+(now passing) are reported so the list shrinks over time.
+
+    python tools/check_regressions.py -- -m "not slow"
+    python tools/check_regressions.py --baseline tests/known_failures.txt -- -q
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import xml.etree.ElementTree as ET
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_baseline(path: str) -> set:
+    if not os.path.exists(path):
+        return set()
+    out = set()
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.add(line)
+    return out
+
+
+def failed_ids(junit_path: str) -> set:
+    tree = ET.parse(junit_path)
+    out = set()
+    for case in tree.iter("testcase"):
+        if case.find("failure") is not None or case.find("error") is not None:
+            cls = case.get("classname", "").replace(".", "/")
+            name = case.get("name", "")
+            out.add(f"{cls}.py::{name}" if cls else name)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "tests", "known_failures.txt"))
+    ap.add_argument("pytest_args", nargs="*",
+                    help="arguments forwarded to pytest (after --)")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        junit = os.path.join(tmp, "junit.xml")
+        cmd = [sys.executable, "-m", "pytest", f"--junitxml={junit}",
+               *args.pytest_args]
+        print("+", " ".join(cmd), flush=True)
+        proc = subprocess.run(cmd, cwd=REPO)
+        if not os.path.exists(junit):
+            print("check_regressions: pytest produced no junit xml "
+                  f"(exit {proc.returncode})")
+            return proc.returncode or 1
+        failures = failed_ids(junit)
+        # Exit codes other than 0 (all passed) / 1 (some tests failed) mean
+        # the run itself is unusable -- no tests collected (5), usage error
+        # (4), internal error (3), interrupted (2).  A failure-free junit
+        # from such a run must NOT turn CI green.
+        if proc.returncode not in (0, 1):
+            print(f"check_regressions: pytest exit {proc.returncode} "
+                  "(not a pass/fail outcome) -- propagating.")
+            return proc.returncode
+
+    known = load_baseline(args.baseline)
+    new = sorted(f for f in failures if f not in known)
+    stale = sorted(k for k in known if k not in failures)
+    expected = sorted(f for f in failures if f in known)
+
+    if expected:
+        print(f"\n{len(expected)} known failure(s) (allowlisted):")
+        for f in expected:
+            print(f"  KNOWN {f}")
+    if stale:
+        print(f"\n{len(stale)} allowlist entr(ies) now pass -- prune "
+              f"{args.baseline}:")
+        for f in stale:
+            print(f"  STALE {f}")
+    if new:
+        print(f"\n{len(new)} NEW failure(s):")
+        for f in new:
+            print(f"  NEW   {f}")
+        return 1
+    print("\ncheck_regressions: no new failures.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
