@@ -32,9 +32,13 @@ from .crossbar import (
     encode_tiled,
     input_write_cost,
     matrix_write_cost,
+    produce_blocks,
+    producer_is_traceable,
     program_blocks,
     programmed_block_mvm,
+    streamed_block_mvm,
     streamed_corrected_mvm,
+    streamed_program_blocks,
     write_cost,
 )
 from .distributed import (

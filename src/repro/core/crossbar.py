@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from .devices import DeviceModel, effective_sigma, effective_sigma_py, quantize
-from .error_correction import denoise_least_square, first_order_correct
+from .error_correction import denoise_least_square
 from .virtualization import MCAGeometry, reassignment_count, zero_padding
 from .write_verify import WriteStats
 
@@ -43,6 +43,10 @@ __all__ = [
     "block_keys",
     "program_blocks",
     "programmed_block_mvm",
+    "produce_blocks",
+    "producer_is_traceable",
+    "streamed_program_blocks",
+    "streamed_block_mvm",
     "corrected_mvm",
     "streamed_corrected_mvm",
 ]
@@ -285,6 +289,183 @@ def programmed_block_mvm(
 
 
 # --------------------------------------------------------------------------- #
+# Scan-fused streamed stages (single-dispatch pipelines over a block producer)
+# --------------------------------------------------------------------------- #
+#
+# The streamed execution mode consumes a *traceable* block producer
+# ``block_fn(i, j) -> (cap_m, cap_n) block``: a pure jax function of the two
+# block-index scalars (which may be tracers).  That protocol lets the whole
+# mb x nb block sweep trace into ONE ``lax.scan`` program -- one device
+# dispatch per program / per MVM -- instead of the O(mb * nb) host->device
+# launches of a Python double loop.  Opaque Python producers (``int(i)``
+# indexing, file reads, ...) cannot trace; :class:`repro.engine.AnalogEngine`
+# keeps a compatibility host loop for those.
+#
+# All three functions below are pure jax (jit/vmap/scan-safe); the engine owns
+# the jit caching (``block_fn`` is a static argument there).
+
+
+def producer_is_traceable(block_fn, cap_m: int, cap_n: int) -> bool:
+    """True when ``block_fn(i, j)`` abstractly traces to a (cap_m, cap_n)
+    block from two int32 scalars (the traceable-producer protocol).
+
+    An explicit ``block_fn.traceable`` attribute short-circuits the probe
+    (``False`` forces the host loop, e.g. for producers whose trace would be
+    valid but unwanted).  The probe itself is one ``jax.eval_shape`` -- no
+    FLOPs, no device dispatch.
+    """
+    forced = getattr(block_fn, "traceable", None)
+    if forced is not None:
+        return bool(forced)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    try:
+        out = jax.eval_shape(block_fn, idx, idx)
+    except Exception:
+        return False
+    return getattr(out, "shape", None) == (cap_m, cap_n)
+
+
+def produce_blocks(block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+                   mb: int, nb: int) -> jnp.ndarray:
+    """Materialize all (mb, nb) producer blocks with one two-level scan.
+
+    Returns (mb, nb, cap_m, cap_n).  One traced call of ``block_fn`` instead
+    of mb * nb host invocations -- the single-dispatch path behind the
+    streamed ``AnalogMatrix.da`` / ``dense()`` views.
+    """
+    def row_step(_, i):
+        def col_step(_, j):
+            return None, block_fn(i, j)
+        _, row = jax.lax.scan(col_step, None, jnp.arange(nb))
+        return None, row
+
+    _, blocks = jax.lax.scan(row_step, None, jnp.arange(mb))
+    return blocks
+
+
+def streamed_program_blocks(
+    block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    mb: int,
+    nb: int,
+) -> jnp.ndarray:
+    """Scan-fused program stage over a traceable producer.
+
+    One ``lax.scan`` over the block-index grid encodes every capacity block
+    (same per-block keys and draws as :func:`program_blocks`: the k_a half of
+    ``block_keys(key, mb, nb)``), so programming a streamed handle is a single
+    device dispatch.  Returns ``at_blocks`` (mb, nb, cap_m, cap_n); the tier-1
+    operand dA is intentionally NOT returned -- streamed handles re-derive it
+    from the producer at execute time so the source matrix is never resident
+    twice.
+    """
+    keys = block_keys(key, mb, nb)
+
+    def row_step(_, row_xs):
+        row_keys, i = row_xs
+
+        def col_step(_, col_xs):
+            k, j = col_xs
+            k_a, _k_x = jax.random.split(k)
+            return None, encode_tiled(block_fn(i, j), k_a, cfg)
+
+        _, at_row = jax.lax.scan(col_step, None, (row_keys, jnp.arange(nb)))
+        return None, at_row
+
+    _, at_blocks = jax.lax.scan(row_step, None, (keys, jnp.arange(mb)))
+    return at_blocks
+
+
+def streamed_block_mvm(
+    block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+    at_blocks: Optional[jnp.ndarray],
+    xb: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    use_kernel: bool = False,
+    tier2: bool = True,
+) -> jnp.ndarray:
+    """Scan-fused execute stage over a streamed block producer.
+
+    One ``lax.scan`` over row blocks (inner scan over column blocks with
+    in-place fp32 row accumulation) replaces the per-block host loop: the
+    input-DAC encode, the per-block ``dA = block_fn(i, j) - at_blocks[i, j]``
+    re-derivation, the tier-1 EC product (``use_kernel=True`` fuses it into
+    the Pallas :func:`repro.kernels.rram_ec_matmul` tile step) and the partial
+    reduction all live inside one traced program -- one device dispatch per
+    MVM.  Key/draw schedule matches :func:`programmed_block_mvm` exactly (the
+    k_x half of the per-block key).  ``xb`` is (n, batch); returns (m, batch).
+
+    ``at_blocks`` is normally the resident programmed image from
+    :func:`streamed_program_blocks` (the engine's execute-many path).
+    ``at_blocks=None`` selects the *one-shot* variant: each block is encoded
+    inside the scan body (consuming the k_a key half, identical draws to
+    program-then-execute) and immediately consumed, so no programmed image is
+    ever resident -- O(one block) memory, the dataflow of the deprecated
+    :func:`streamed_corrected_mvm` shim at paper scale.
+    """
+    oneshot = at_blocks is None
+    if oneshot:
+        cap_m, cap_n = cfg.geom.capacity
+        mb, nb = -(-m // cap_m), -(-n // cap_n)
+    else:
+        mb, nb, cap_m, cap_n = at_blocks.shape
+    batch = xb.shape[1]
+    if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
+        raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
+    x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
+    x_chunks = x_pad.reshape(nb, cap_n, batch)
+    keys = block_keys(key, mb, nb)
+
+    def row_step(_, row_xs):
+        if oneshot:
+            row_keys, i = row_xs
+        else:
+            at_row, row_keys, i = row_xs
+
+        def col_step(acc, col_xs):
+            if oneshot:
+                k, j, x_blk = col_xs
+                a_blk = block_fn(i, j)
+                k_a, k_x = jax.random.split(k)
+                at_blk = encode_tiled(a_blk, k_a, cfg)
+            else:
+                at_blk, k, j, x_blk = col_xs
+                _k_a, k_x = jax.random.split(k)
+                a_blk = block_fn(i, j) if cfg.ec else None
+            x_t = _encode_vec(x_blk, k_x, cfg) if cfg.encode_inputs else x_blk
+            if not cfg.ec:
+                return acc + at_blk @ x_t, None
+            if use_kernel:
+                from repro.kernels import ops as kops
+                return acc + kops.rram_ec_tile_mvm(
+                    x_blk, x_t, at_blk, a_blk - at_blk), None
+            if cfg.ec_mode == "faithful":
+                return acc + (at_blk @ x_blk + a_blk @ x_t
+                              - at_blk @ x_t), None
+            return acc + (at_blk @ x_blk + (a_blk - at_blk) @ x_t), None
+
+        acc0 = jnp.zeros((cap_m, batch), jnp.float32)
+        col_xs = (row_keys, jnp.arange(nb), x_chunks) if oneshot else \
+            (at_row, row_keys, jnp.arange(nb), x_chunks)
+        acc, _ = jax.lax.scan(col_step, acc0, col_xs)
+        return None, acc
+
+    row_xs = (keys, jnp.arange(mb)) if oneshot else \
+        (at_blocks, keys, jnp.arange(mb))
+    _, rows = jax.lax.scan(row_step, None, row_xs)
+    p = rows.reshape(mb * cap_m, batch)[:m]
+    if cfg.ec and tier2:
+        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
+                                 method=cfg.denoise_method)
+    return p
+
+
+# --------------------------------------------------------------------------- #
 # Legacy one-shot entry points (deprecated shims over the two-stage dataflow)
 # --------------------------------------------------------------------------- #
 
@@ -324,39 +505,35 @@ def streamed_corrected_mvm(
 ) -> Tuple[jnp.ndarray, WriteStats]:
     """Large-problem variant: ``A`` is produced block-by-block by ``block_fn(i, j)``
     (each block capacity-sized, already padded), so matrices such as the paper's
-    65,025 x 65,025 case never materialize.  Python loop over blocks; the inner
-    step is jitted once and reused.
+    65,025 x 65,025 case never materialize.
 
     .. deprecated:: use ``AnalogEngine(cfg, execution="streamed")`` -- this
-       one-shot form discards the programmed tiles after a single MVM.
+       one-shot form discards the programmed tiles after a single MVM.  It is
+       now a thin composition over the scan-fused pipeline: traceable
+       producers run the one-shot :func:`streamed_block_mvm` variant (each
+       block encoded inside the scan body and immediately consumed -- ONE
+       device dispatch, O(one block) memory, so the 65,025^2 case still never
+       materializes anything A-sized); opaque Python producers fall back to
+       the engine's compatibility host loop (the one remaining Python block
+       loop; note that path keeps the programmed image resident).  The
+       per-block PRNG schedule follows the engine's ``block_keys`` split (k_a
+       programs, k_x drives the input DAC), which replaces this shim's
+       historical per-block ``fold_in(fold_in(key, i), j)`` draws --
+       statistically identical, numerically different.
     """
-    cap_m, cap_n = cfg.geom.capacity
-    mb = -(-m // cap_m)
-    nb = -(-n // cap_n)
     squeeze = x.ndim == 1
     xb = x[:, None] if squeeze else x
-    batch = xb.shape[1]
-    x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
-    x_chunks = x_pad.reshape(nb, cap_n, batch)
-
-    def _block_mvm(a_blk, x_blk, k):
-        k_a, k_x = jax.random.split(k)
-        a_t = encode_tiled(a_blk, k_a, cfg)
-        x_t = _encode_vec(x_blk, k_x, cfg) if cfg.encode_inputs else x_blk
-        if cfg.ec:
-            return first_order_correct(a_blk, a_t, x_blk, x_t, mode=cfg.ec_mode)
-        return a_t @ x_t
-
-    step = jax.jit(_block_mvm)
-    rows = []
-    for i in range(mb):
-        acc = jnp.zeros((cap_m, batch), jnp.float32)
-        for j in range(nb):
-            kij = jax.random.fold_in(jax.random.fold_in(key, i), j)
-            acc = acc + step(block_fn(i, j), x_chunks[j], kij)
-        rows.append(acc)
-    p = jnp.concatenate(rows, axis=0)[:m]
-    if cfg.ec:
-        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
-    stats = write_cost(m, n, cfg, batch=batch)
+    cap_m, cap_n = cfg.geom.capacity
+    if producer_is_traceable(block_fn, cap_m, cap_n):
+        # Locally-scoped jit: the trace (and the producer closure it pins)
+        # is garbage-collected with this call, not cached process-wide.
+        run = jax.jit(partial(streamed_block_mvm, block_fn, None,
+                              cfg=cfg, m=m, n=n))
+        p = run(xb, key)
+    else:
+        from repro.engine import AnalogEngine   # deferred: engine imports us
+        engine = AnalogEngine(cfg, execution="streamed")
+        A = engine.program(block_fn, key, shape=(m, n))
+        p = engine.mvm(A, xb, key=key)
+    stats = write_cost(m, n, cfg, batch=xb.shape[1])
     return (p[:, 0] if squeeze else p), stats

@@ -6,7 +6,7 @@ with the *published* dimensions and condition numbers (Supplementary Table 2).
 spectrum hitting the target kappa; `Iperturb` is the paper's slightly perturbed
 identity.  For the strong-scaling sizes (up to 65,025^2) an *implicit* banded
 generator produces capacity-sized blocks on demand so the matrix never
-materializes (see `streamed_corrected_mvm`).
+materializes (fed to ``AnalogEngine(cfg, execution="streamed")``).
 """
 from __future__ import annotations
 
@@ -78,6 +78,10 @@ class ImplicitBandedMatrix:
     A = diag_dominant band + seeded pseudo-random off-band texture, defined
     blockwise: ``block(i, j)`` returns the (cap_m x cap_n) block at block-index
     (i, j) without ever forming A.  Deterministic in (seed, i, j).
+
+    ``block`` is a *traceable* producer in the engine's sense (pure jax
+    function of the index scalars), so streamed programming and every
+    streamed MVM against it fuse into single-dispatch ``lax.scan`` pipelines.
     """
 
     n: int

@@ -20,6 +20,28 @@ One ``execution=`` switch selects where the programmed image lives:
                          MVMs run tier-1 locally, psum partials over the
                          contraction axis and denoise on-node.
 
+Traceable block producers (streamed execution)
+----------------------------------------------
+
+A streamed producer is *traceable* when ``block_fn(i, j)`` is a pure jax
+function of the two block-index scalars: it must accept traced int32 scalars
+(so only jax ops on ``i``/``j`` -- array indexing, ``jax.random.fold_in``,
+arithmetic -- no ``int(i)``, host I/O, or Python control flow on the values)
+and return a fixed-shape capacity-sized block.  Every procedurally generated
+paper workload (e.g. :class:`repro.core.matrices.ImplicitBandedMatrix`)
+qualifies.  For traceable producers the engine fuses the whole mb x nb block
+sweep into single ``lax.scan`` pipelines: ``program`` is one device dispatch,
+and every ``mvm`` -- input-DAC encode, per-block dA re-derivation, tier-1 EC
+(the Pallas ``rram_ec_matmul`` tile step under ``backend="pallas"``), fp32
+row accumulation and tier-2 denoise -- is ONE dispatch instead of mb * nb.
+Solvers driving a streamed handle therefore trace into one compiled program
+end-to-end.
+
+Traceability is auto-detected with an abstract trace at ``program`` time; set
+a ``block_fn.traceable = False`` attribute to force the compatibility host
+loop (one jitted dispatch per block -- the pre-scan behavior), which is also
+what opaque producers (ones that fail the abstract trace) fall back to.
+
 and a ``backend=`` switch dispatches the inner product:
 
   * ``"reference"`` -- pure-jnp blockwise oracle (always available);
@@ -105,12 +127,18 @@ class AnalogMatrix:
     # streamed layout keeps the producer instead of materializing da_blocks,
     # so the resident state is exactly the programmed image (1x, not 2x).
     block_fn: Optional[Callable[[int, int], jnp.ndarray]] = None
+    # whether block_fn traced as a pure jax function of the index scalars
+    # (scan-fused single-dispatch pipelines) or needs the host loop.
+    block_traceable: bool = False
     # distributed layout: dense (m, n) arrays block-sharded over the mesh.
     at_dense: Optional[jnp.ndarray] = None
     da_dense: Optional[jnp.ndarray] = None
     calls: int = 0
     # cached dense padded layout for the pallas backend (built on first use).
     _padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+    # per-handle jitted scan pipelines keyed by use_kernel (built on first
+    # execute; dies with the handle -- see the jit-scoping note below).
+    _scan_exec: Optional[dict] = None
 
     @property
     def m(self) -> int:
@@ -134,11 +162,30 @@ class AnalogMatrix:
             return self.da_dense
         if self.da_blocks is not None:
             return _assemble(self.da_blocks, self.m, self.n)
+        return _assemble(self._producer_blocks() - self.at_blocks,
+                         self.m, self.n)
+
+    def dense(self) -> jnp.ndarray:
+        """The exact source matrix A = A_tilde + dA, dense unpadded (m, n).
+
+        For streamed handles this skips the A_tilde/dA round trip entirely:
+        A_tilde + (block - A_tilde) == block, so one producer sweep suffices.
+        """
+        if self.at_dense is not None:
+            return self.at_dense + self.da_dense
+        if self.da_blocks is not None:
+            return _assemble(self.at_blocks + self.da_blocks, self.m, self.n)
+        return _assemble(self._producer_blocks(), self.m, self.n)
+
+    def _producer_blocks(self) -> jnp.ndarray:
+        """All producer blocks, (mb, nb, cap_m, cap_n): one scanned dispatch
+        for traceable producers, a host loop for opaque ones."""
         mb, nb = self.at_blocks.shape[:2]
-        da = jnp.stack([jnp.stack([self.block_fn(i, j) - self.at_blocks[i, j]
-                                   for j in range(nb)])
-                        for i in range(mb)])
-        return _assemble(da, self.m, self.n)
+        if self.block_traceable:
+            return jax.jit(functools.partial(
+                crossbar.produce_blocks, self.block_fn, mb, nb))()
+        return jnp.stack([jnp.stack([self.block_fn(i, j) for j in range(nb)])
+                          for i in range(mb)])
 
     def __matmul__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.engine.mvm(self, x)
@@ -188,6 +235,16 @@ def _exec_pallas(at, da, xb, key, *, cfg, m, n):
             p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
                                      method=cfg.denoise_method)
     return p
+
+
+# Scan-fused streamed pipelines: the pure stages live in
+# :mod:`repro.core.crossbar` (streamed_program_blocks / streamed_block_mvm /
+# produce_blocks); jit scoping is deliberate.  Program-time and da/dense
+# sweeps use locally-scoped jits (one trace per call, garbage-collected with
+# it); the execute-many hot path caches its jitted pipeline ON THE HANDLE
+# (:attr:`AnalogMatrix._scan_exec`), so a warm streamed MVM re-invokes the
+# producer zero times yet the trace -- and the producer closure it pins --
+# dies with the handle instead of accumulating in a process-wide cache.
 
 
 class AnalogEngine:
@@ -255,6 +312,9 @@ class AnalogEngine:
         ``a`` is a dense (m, n) array, or -- for ``execution="streamed"`` -- a
         ``block_fn(i, j)`` producer of capacity-sized (already padded) blocks,
         in which case ``shape=(m, n)`` gives the logical problem size.
+        Producers that trace as pure jax functions of the index scalars (see
+        the module docstring) are programmed and executed as single-dispatch
+        ``lax.scan`` pipelines; opaque producers take a host loop per block.
         """
         if callable(a) and not hasattr(a, "shape"):
             if self.execution != "streamed":
@@ -276,23 +336,34 @@ class AnalogEngine:
         m, n = shape
         cap_m, cap_n = self.cfg.geom.capacity
         mb, nb = -(-m // cap_m), -(-n // cap_n)
-        keys = crossbar.block_keys(key, mb, nb)
+        traceable = crossbar.producer_is_traceable(block_fn, cap_m, cap_n)
+        if traceable:
+            # One scanned dispatch programs every capacity block (local jit:
+            # programming runs once per handle, no process-wide cache entry).
+            at_blocks = jax.jit(functools.partial(
+                crossbar.streamed_program_blocks, block_fn,
+                cfg=self.cfg, mb=mb, nb=nb))(key)
+        else:
+            # Compatibility host loop: one jitted dispatch per block.
+            keys = crossbar.block_keys(key, mb, nb)
 
-        def enc(blk, k):
-            k_a, _ = jax.random.split(k)
-            return crossbar.encode_tiled(blk, k_a, self.cfg)
+            def enc(blk, k):
+                k_a, _ = jax.random.split(k)
+                return crossbar.encode_tiled(blk, k_a, self.cfg)
 
-        step = jax.jit(enc)
-        at_rows = [jnp.stack([step(block_fn(i, j), keys[i, j])
-                              for j in range(nb)])
-                   for i in range(mb)]
+            step = jax.jit(enc)
+            at_blocks = jnp.stack(
+                [jnp.stack([step(block_fn(i, j), keys[i, j])
+                            for j in range(nb)])
+                 for i in range(mb)])
         # Only the programmed image is kept resident (the simulated hardware
         # state); the tier-1 operand dA is re-derived per block at execute
         # time from the producer, so huge matrices are never held twice.
         return AnalogMatrix(
             engine=self, shape=(m, n), base_key=key,
             write_stats=crossbar.matrix_write_cost(m, n, self.cfg),
-            at_blocks=jnp.stack(at_rows), block_fn=block_fn)
+            at_blocks=at_blocks, block_fn=block_fn,
+            block_traceable=traceable)
 
     def _program_distributed(self, a, key) -> AnalogMatrix:
         from repro.core import distributed as D
@@ -334,13 +405,15 @@ class AnalogEngine:
     def input_write_stats(self, A: AnalogMatrix, batch: int = 1) -> WriteStats:
         """Per-execution input-write cost, in the same reporting convention as
         the handle's ``write_stats`` (distributed: mean across devices, the
-        paper's Figs. 4-5 convention)."""
+        paper's Figs. 4-5 convention).  Non-divisible mesh shapes bill the
+        ceil-divided per-device footprint -- the rows/cols a real placement
+        would pad onto the largest shard -- instead of silently flooring."""
         m, n = A.shape
         if self.execution == "distributed":
             sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
             for ax in self.row_axes:
-                m //= sizes[ax]
-            n //= sizes[self.col_axis]
+                m = -(-m // sizes[ax])
+            n = -(-n // sizes[self.col_axis])
         return crossbar.input_write_cost(m, n, self.cfg, batch=batch)
 
     def _execute(self, A, x, key, with_stats=False):
@@ -406,19 +479,42 @@ class AnalogEngine:
         return (p[:, 0] if squeeze else p), stats
 
     def _exec_streamed(self, A, xb, key):
-        """Per-block loop against the resident image: dA = block_fn - A_tilde
-        is formed one capacity block at a time (O(block) extra memory), so the
-        streamed path never holds the source matrix twice."""
+        """Streamed execute: dA = block_fn - A_tilde is re-derived per
+        capacity block (O(block) extra memory), so the streamed path never
+        holds the source matrix twice.  Traceable producers run the
+        scan-fused single-dispatch pipeline; opaque ones take the
+        compatibility host loop (one jitted dispatch per block)."""
         cfg = self.cfg
         if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
             raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
+        m, n = A.shape
+        use_kernel = self.backend == "pallas" and cfg.ec
+        if A.block_traceable:
+            fn = (A._scan_exec or {}).get(use_kernel)
+            if fn is None:
+                # Jitted once per handle (per backend): warm MVMs are cache
+                # hits with zero host-side producer work, and the trace is
+                # released with the handle rather than pinned process-wide.
+                fn = jax.jit(functools.partial(
+                    crossbar.streamed_block_mvm, A.block_fn,
+                    cfg=cfg, m=m, n=n, use_kernel=use_kernel))
+                if A._scan_exec is None:
+                    A._scan_exec = {}
+                A._scan_exec[use_kernel] = fn
+            return fn(A.at_blocks, xb, key)
+        return self._exec_streamed_host(A, xb, key, use_kernel)
+
+    def _exec_streamed_host(self, A, xb, key, use_kernel):
+        """The compat-only Python block loop (the one remaining in the repo):
+        O(mb * nb) dispatches per MVM, kept for producers that cannot trace.
+        Same per-block keys, draws and tile math as the scanned pipeline."""
+        cfg = self.cfg
         m, n = A.shape
         mb, nb, cap_m, cap_n = A.at_blocks.shape
         batch = xb.shape[1]
         x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
         x_chunks = x_pad.reshape(nb, cap_n, batch)
         keys = crossbar.block_keys(key, mb, nb)
-        use_kernel = self.backend == "pallas" and cfg.ec
 
         if self._streamed_step is None:
             def step(at_blk, a_blk, x_blk, k):
@@ -427,14 +523,13 @@ class AnalogEngine:
                     if cfg.encode_inputs else x_blk
                 if not cfg.ec:
                     return at_blk @ x_t
-                da_blk = a_blk - at_blk
                 if use_kernel:
                     from repro.kernels import ops as kops
-                    return kops.rram_ec_matmul(
-                        x_blk.T, x_t.T, at_blk.T, da_blk.T).T
+                    return kops.rram_ec_tile_mvm(x_blk, x_t, at_blk,
+                                                 a_blk - at_blk)
                 if cfg.ec_mode == "faithful":
                     return at_blk @ x_blk + a_blk @ x_t - at_blk @ x_t
-                return at_blk @ x_blk + da_blk @ x_t
+                return at_blk @ x_blk + (a_blk - at_blk) @ x_t
 
             # Jitted once per engine: execute-many calls reuse the trace.
             self._streamed_step = jax.jit(step)

@@ -5,6 +5,7 @@ from .ops import (
     denoise_thomas,
     on_cpu,
     rram_ec_matmul,
+    rram_ec_tile_mvm,
     rram_encode_matmul,
     solver_cg_update,
     solver_richardson_update,
@@ -15,6 +16,7 @@ __all__ = [
     "denoise_thomas",
     "on_cpu",
     "rram_ec_matmul",
+    "rram_ec_tile_mvm",
     "rram_encode_matmul",
     "solver_cg_update",
     "solver_richardson_update",

@@ -26,6 +26,7 @@ __all__ = [
     "on_cpu",
     "rram_encode_matmul",
     "rram_ec_matmul",
+    "rram_ec_tile_mvm",
     "denoise_thomas",
     "denoise_stencil",
     "solver_richardson_update",
@@ -101,6 +102,26 @@ def rram_ec_matmul(
         xp, xtp, wtp, dwp, block_m=bm, block_k=bk, block_n=bn,
         interpret=on_cpu() if interpret is None else interpret)
     return out[:m, :n]
+
+
+def rram_ec_tile_mvm(
+    x_blk: jnp.ndarray,
+    x_t: jnp.ndarray,
+    at_blk: jnp.ndarray,
+    da_blk: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Tier-1 EC step for ONE capacity tile in the engine's (n, batch) layout.
+
+    Computes ``at_blk @ x_blk + da_blk @ x_t`` as a single fused
+    :func:`rram_ec_matmul` call (the transposed y^T = x^T At^T + xt^T dA^T
+    form), so the streamed scan body and the host-loop fallback share one
+    kernel-backed tile step.  ``x_blk``/``x_t``: (cap_n, batch);
+    ``at_blk``/``da_blk``: (cap_m, cap_n).  Returns fp32 (cap_m, batch).
+    """
+    return rram_ec_matmul(x_blk.T, x_t.T, at_blk.T, da_blk.T,
+                          interpret=interpret).T
 
 
 def solver_richardson_update(

@@ -17,6 +17,11 @@ Both kernels grid over row blocks with the full RHS batch per block; scalar
 coefficients travel as tiny (1, batch) operands so they may be traced values
 (auto-estimated ``omega``, per-iteration ``alpha``).  Interpret mode on CPU,
 Mosaic on TPU -- same convention as the other kernels in this package.
+
+Both are pure traced calls, so they compose with the engine's scan-fused
+streamed MVM: a ``solvers.cg(A_streamed, b, backend="pallas")`` iteration
+body -- one scanned EC block sweep + one fused twin axpy -- lives entirely
+inside the solver's single jitted ``lax.while_loop`` program.
 """
 from __future__ import annotations
 

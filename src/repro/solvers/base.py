@@ -101,13 +101,18 @@ def as_operator(
     if isinstance(A, LinearOperator):
         return A
     if isinstance(A, AnalogMatrix):
+        # Streamed handles with a traceable producer keep the whole solve one
+        # compiled program: each matvec inside the solver's jitted core traces
+        # the engine's scan-fused pipeline inline (one dispatch per MVM), and
+        # ``dense()`` reconstructs A with a single producer sweep (used by
+        # jacobi's diagonal and refine's digital outer residual).
         eng = A.engine
         return LinearOperator(
             matvec=lambda v, k: eng.mvm(A, v, key=k),
             shape=A.shape,
             write_stats=A.write_stats,
             input_stats=lambda batch: eng.input_write_stats(A, batch),
-            dense=lambda: A.a_tilde + A.da,
+            dense=A.dense,
             analog=True,
         )
     if callable(A) and not hasattr(A, "shape"):

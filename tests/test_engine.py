@@ -221,6 +221,166 @@ def test_streamed_requires_shape(problem):
             lambda i, j: jnp.zeros((64, 64)), KEY, shape=(64, 64))
 
 
+def _block_view(a, cfg):
+    """(mb, nb, cap_m, cap_n) capacity-block view of a padded dense matrix."""
+    m, n = a.shape
+    cap_m, cap_n = cfg.geom.capacity
+    mb, nb = -(-m // cap_m), -(-n // cap_n)
+    a_pad = jnp.pad(a, ((0, mb * cap_m - m), (0, nb * cap_n - n)))
+    return a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+
+
+def _counting_producer(blocks):
+    calls = {"n": 0}
+
+    def producer(i, j):
+        calls["n"] += 1
+        return blocks[i, j]
+
+    return producer, calls
+
+
+def test_streamed_traceable_single_dispatch(problem):
+    """The scan-fused pipeline: a traceable producer is invoked O(1) times
+    (trace only) per program and per MVM -- never once per block -- and a
+    warm MVM re-invokes it zero times (one cached device dispatch)."""
+    a, x = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    mb, nb = blocks.shape[:2]
+    assert mb * nb >= 4                      # the loop would pay >= 4 here
+    producer, calls = _counting_producer(blocks)
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(producer, KEY, shape=a.shape)
+    assert A.block_traceable
+    assert calls["n"] <= 3                   # traceability probe + scan trace
+    after_program = calls["n"]
+    y1 = engine.mvm(A, x, key=KEY)
+    assert calls["n"] - after_program <= 1   # first call traces once
+    warm = calls["n"]
+    y2 = engine.mvm(A, x, key=jax.random.fold_in(KEY, 1))
+    assert calls["n"] == warm                # warm MVM: zero host work
+    assert y1.shape == y2.shape == (a.shape[0],)
+    # and the scanned output matches the dense reference path
+    dense = AnalogEngine(cfg)
+    y_d = dense.mvm(dense.program(a, KEY), x, key=KEY)
+    assert float(rel_l2(y1, y_d)) <= 1e-5
+
+
+def test_streamed_opaque_producer_host_loop(problem):
+    """Opaque producers (host-only indexing) fall back to the compat loop --
+    one producer invocation per block per MVM -- and still match the scanned
+    pipeline exactly (same per-block keys and draws)."""
+    a, x = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    mb, nb = blocks.shape[:2]
+    calls = {"n": 0}
+
+    def opaque(i, j):
+        calls["n"] += 1
+        return blocks[int(i), int(j)]        # int() rejects tracers
+
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(opaque, KEY, shape=a.shape)
+    assert not A.block_traceable
+    assert calls["n"] == mb * nb + 1         # +1: the failed traceability probe
+    before = calls["n"]
+    y_host = engine.mvm(A, x, key=KEY)
+    assert calls["n"] - before == mb * nb    # the O(mb*nb) dispatch regime
+    A_s = engine.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    y_scan = engine.mvm(A_s, x, key=KEY)
+    assert float(rel_l2(y_host, y_scan)) <= 1e-5
+    # an explicit traceable=False marker forces the host loop too
+    forced = lambda i, j: blocks[i, j]
+    forced.traceable = False
+    assert not engine.program(forced, KEY, shape=a.shape).block_traceable
+
+
+def test_streamed_pallas_matches_reference(problem):
+    """The use_kernel branch of the streamed pipeline (fused rram_ec_matmul
+    tile step inside the scan body) against the reference streamed path:
+    identical draws, <= 1e-5."""
+    a, x = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    ref = AnalogEngine(cfg, execution="streamed")
+    pal = AnalogEngine(cfg, execution="streamed", backend="pallas")
+    A_r = ref.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    A_p = pal.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    y_r = ref.mvm(A_r, x, key=KEY)
+    y_p = pal.mvm(A_p, x, key=KEY)
+    assert float(rel_l2(y_p, y_r)) <= 1e-5
+    # batched panels run through the same fused tile step
+    xb = jnp.stack([x, -0.5 * x], axis=1)
+    yb_r = ref.mvm(A_r, xb, key=KEY)
+    yb_p = pal.mvm(A_p, xb, key=KEY)
+    assert float(rel_l2(yb_p, yb_r)) <= 1e-5
+
+
+def test_streamed_da_and_dense_scanned(problem):
+    """AnalogMatrix.da / .dense() on a streamed handle run one scanned
+    producer sweep (no per-block host dispatches) and reconstruct A."""
+    a, _ = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    producer, calls = _counting_producer(blocks)
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(producer, KEY, shape=a.shape)
+    before = calls["n"]
+    da = A.da
+    assert calls["n"] - before <= 1          # one traced sweep, not mb*nb
+    np.testing.assert_allclose(np.asarray(A.a_tilde + da), np.asarray(a),
+                               rtol=1e-5, atol=1e-6)
+    before = calls["n"]
+    np.testing.assert_allclose(np.asarray(A.dense()), np.asarray(a),
+                               rtol=1e-5, atol=1e-6)
+    assert calls["n"] - before <= 1          # one traced sweep, not mb*nb
+
+
+def test_streamed_shim_routes_through_engine(problem):
+    """The deprecated one-shot shim composes over the scan-fused pipeline:
+    same output as program+mvm under the same key (identical k_a/k_x draws),
+    O(1) producer invocations (the one-shot scan never materializes the
+    image), legacy (matrix + input) accounting preserved."""
+    a, x = problem
+    cfg = make_cfg()
+    m, n = a.shape
+    blocks = _block_view(a, cfg)
+    producer, calls = _counting_producer(blocks)
+    y_shim, stats = crossbar.streamed_corrected_mvm(producer, x, m, n, KEY,
+                                                    cfg)
+    assert calls["n"] <= 3                   # probe + one fused scan trace
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(lambda i, j: blocks[i, j], KEY, shape=(m, n))
+    y_eng = engine.mvm(A, x, key=KEY)
+    assert float(rel_l2(y_shim, y_eng)) <= 1e-5
+    np.testing.assert_allclose(
+        float(stats.energy_j),
+        float(crossbar.write_cost(m, n, cfg, batch=1).energy_j), rtol=1e-6)
+
+
+def test_input_write_stats_rounds_up_nondivisible():
+    """Distributed per-device input cost must ceil-divide the footprint on
+    non-divisible mesh shapes, not silently floor it.  (193 rows over 3
+    devices: the floored 64-row shard hides a capacity block; the real
+    largest shard holds 65 rows and spans two.)"""
+    from types import SimpleNamespace
+    cfg = make_cfg()                         # capacity 64 x 64
+    eng = AnalogEngine.__new__(AnalogEngine)
+    eng.cfg, eng.execution, eng.backend = cfg, "distributed", "reference"
+    eng.row_axes, eng.col_axis = ("data",), "model"
+    eng.mesh = SimpleNamespace(axis_names=("data", "model"),
+                               devices=np.zeros((3, 4)))
+    A = SimpleNamespace(shape=(193, 90))
+    got = eng.input_write_stats(A, batch=2)
+    want = crossbar.input_write_cost(-(-193 // 3), -(-90 // 4), cfg, batch=2)
+    np.testing.assert_allclose(float(got.energy_j), float(want.energy_j),
+                               rtol=1e-6)
+    floor = crossbar.input_write_cost(193 // 3, 90 // 4, cfg, batch=2)
+    assert float(got.energy_j) > float(floor.energy_j)
+
+
 # -------------------------------------------------------------- pallas backend
 def test_pallas_backend_accuracy(problem):
     a, x = problem
