@@ -1,0 +1,76 @@
+"""Static allocation analysis: the largest array a traced program can hold.
+
+The paper's scalability claim is that a >= 65,536^2 solve never allocates an
+A-sized array -- not on the host, not on any device.  That property is
+*structural*: it is visible in the jaxpr of the jitted computation before
+anything runs.  :func:`max_aval_elements` walks every equation (recursing
+into scan/while/cond/pjit/shard_map sub-jaxprs) and returns the largest
+intermediate, input, constant or output aval in elements, so tests and
+benchmarks can assert ``max_aval_elements(mvm_fn, x, key) << m * n`` without
+paying for (or being able to afford) a real A-sized buffer.
+
+Note the per-device view: inside a ``shard_map`` sub-jaxpr the avals are the
+per-device block shapes, which is exactly the bound that matters -- a global
+array sharded 8 ways shows up as its (A/8)-sized local aval, while a true
+A-sized materialization shows up full size on the offending equation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+try:  # jax >= 0.5 moved the IR types to jax.extend.core
+    from jax.extend.core import ClosedJaxpr as _ClosedJaxpr, Jaxpr as _Jaxpr
+except ImportError:  # pragma: no cover - older jax
+    _Jaxpr = jax.core.Jaxpr
+    _ClosedJaxpr = jax.core.ClosedJaxpr
+
+__all__ = ["max_aval_elements", "jaxpr_max_elements"]
+
+
+def _aval_elements(var) -> int:
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
+
+
+def _iter_subjaxprs(params: dict):
+    for v in params.values():
+        if isinstance(v, _Jaxpr):
+            yield v
+        elif isinstance(v, _ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                if isinstance(item, _Jaxpr):
+                    yield item
+                elif isinstance(item, _ClosedJaxpr):
+                    yield item.jaxpr
+
+
+def jaxpr_max_elements(jaxpr) -> int:
+    """Largest aval (elements) anywhere in a (closed) jaxpr, recursively."""
+    if isinstance(jaxpr, _ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    best = 0
+    for var in (*jaxpr.invars, *jaxpr.constvars, *jaxpr.outvars):
+        best = max(best, _aval_elements(var))
+    for eqn in jaxpr.eqns:
+        for var in (*eqn.invars, *eqn.outvars):
+            best = max(best, _aval_elements(var))
+        for sub in _iter_subjaxprs(eqn.params):
+            best = max(best, jaxpr_max_elements(sub))
+    return best
+
+
+def max_aval_elements(fn, *args: Any, **kwargs: Any) -> int:
+    """Largest array (in elements) the traced ``fn(*args)`` can ever hold.
+
+    ``args`` may be real arrays or ``jax.ShapeDtypeStruct`` placeholders --
+    nothing executes and nothing is allocated; only the trace is inspected.
+    """
+    return jaxpr_max_elements(jax.make_jaxpr(fn)(*args, **kwargs))

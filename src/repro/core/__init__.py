@@ -32,6 +32,9 @@ from .crossbar import (
     encode_tiled,
     input_write_cost,
     matrix_write_cost,
+    local_block_keys,
+    local_dense_mvm,
+    local_program_dense,
     produce_blocks,
     producer_is_traceable,
     program_blocks,
@@ -45,6 +48,10 @@ from .distributed import (
     distributed_corrected_mvm,
     make_distributed_program,
     make_distributed_programmed_mvm,
+    make_distributed_streamed_mvm,
+    make_distributed_streamed_program,
+    mesh_grid_shape,
+    pallas_shard_map_supported,
     shard_matrix,
 )
 from .metrics import rel_l2, rel_linf, relative_error

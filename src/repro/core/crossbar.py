@@ -41,8 +41,11 @@ __all__ = [
     "matrix_write_cost",
     "input_write_cost",
     "block_keys",
+    "local_block_keys",
     "program_blocks",
     "programmed_block_mvm",
+    "local_program_dense",
+    "local_dense_mvm",
     "produce_blocks",
     "producer_is_traceable",
     "streamed_program_blocks",
@@ -202,6 +205,24 @@ def block_keys(key: jax.Array, mb: int, nb: int) -> jax.Array:
     return keys.reshape((mb, nb) + keys.shape[1:])   # typed or raw key format
 
 
+def local_block_keys(key: jax.Array, mb: int, nb: int, i0, j0,
+                     grid: Optional[Tuple[int, int]]) -> jax.Array:
+    """The (mb, nb) slab of the GLOBAL ``block_keys(key, *grid)`` schedule
+    whose origin sits at block coordinates ``(i0, j0)``.
+
+    The per-block key is a function of the global block index only -- never of
+    how the grid is carved across devices -- so the encoded image (and every
+    DAC draw) of block (I, J) is identical whether the grid runs on one device
+    or is mesh-sharded.  ``i0``/``j0`` may be traced scalars (mesh coordinates
+    inside shard_map).  ``grid=None`` means the local grid IS the global grid.
+    """
+    if grid is None:
+        return block_keys(key, mb, nb)
+    keys = block_keys(key, *grid)
+    start = (i0, j0) + (0,) * (keys.ndim - 2)
+    return jax.lax.dynamic_slice(keys, start, (mb, nb) + keys.shape[2:])
+
+
 def assemble_blocks(blocks: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
     """Inverse of :func:`repro.core.virtualization.block_partition`:
     (mb, nb, cap_m, cap_n) capacity tiles -> dense (m, n), padding sliced."""
@@ -248,6 +269,7 @@ def programmed_block_mvm(
     m: int,
     n: int,
     tier2: bool = True,
+    use_kernel: bool = False,
 ) -> jnp.ndarray:
     """Execute stage: corrected MVM against an already-programmed image.
 
@@ -256,7 +278,10 @@ def programmed_block_mvm(
     half of the block key), the tier-1 product is assembled from the stored
     operands as  p = A_tilde x + dA x_tilde,  column-block partials are summed
     and tier-2 denoising runs on the assembled output (``tier2=False`` defers
-    it, e.g. until after a cross-device psum).  Returns (m, batch).
+    it, e.g. until after a cross-device psum).  ``use_kernel=True`` dispatches
+    the per-block tier-1 product to the fused Pallas
+    :func:`repro.kernels.ops.rram_ec_tile_mvm` tile step (requires
+    ``cfg.ec``).  Returns (m, batch).
     """
     mb, nb, cap_m, cap_n = at_blocks.shape
     batch = xb.shape[1]
@@ -273,6 +298,9 @@ def programmed_block_mvm(
             x_t = _encode_vec(x_blk, k_x, cfg) if cfg.encode_inputs else x_blk
             if not cfg.ec:
                 return at_blk @ x_t
+            if use_kernel:
+                from repro.kernels import ops as kops
+                return kops.rram_ec_tile_mvm(x_blk, x_t, at_blk, da_blk)
             if cfg.ec_mode == "faithful":
                 # The paper's three analog products, with A = A_tilde + dA.
                 return (at_blk @ x_blk + (at_blk + da_blk) @ x_t
@@ -286,6 +314,44 @@ def programmed_block_mvm(
     if cfg.ec and tier2:
         p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
     return p
+
+
+def local_program_dense(a: jnp.ndarray, key: jax.Array, cfg: CrossbarConfig
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One device's program stage over a resident dense operand.
+
+    The per-device half of the distributed dense pipeline, shared with the
+    local path: :func:`program_blocks` + reassembly to the dense per-device
+    layout (the placed conductance image / tier-1 operand).
+    """
+    m, n = a.shape
+    at_b, da_b = program_blocks(a, key, cfg)
+    return assemble_blocks(at_b, m, n), assemble_blocks(da_b, m, n)
+
+
+def local_dense_mvm(
+    at: jnp.ndarray,
+    da: jnp.ndarray,
+    xb: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    tier2: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """One device's execute stage over resident dense (m, n) operands.
+
+    Partitions to capacity blocks and runs the shared
+    :func:`programmed_block_mvm` pipeline -- the SAME implementation the
+    local execution mode uses, so the distributed path has no private copy
+    of the tier-1 dataflow.  ``tier2=False`` defers denoising until after
+    the cross-device psum (the caller's "on-node" tier-2).
+    """
+    from .virtualization import block_partition
+    m, n = at.shape
+    return programmed_block_mvm(
+        block_partition(at, cfg.geom), block_partition(da, cfg.geom),
+        xb, key, cfg, m=m, n=n, tier2=tier2, use_kernel=use_kernel)
 
 
 # --------------------------------------------------------------------------- #
@@ -349,6 +415,9 @@ def streamed_program_blocks(
     cfg: CrossbarConfig,
     mb: int,
     nb: int,
+    *,
+    block_offset=(0, 0),
+    grid: Optional[Tuple[int, int]] = None,
 ) -> jnp.ndarray:
     """Scan-fused program stage over a traceable producer.
 
@@ -359,8 +428,17 @@ def streamed_program_blocks(
     operand dA is intentionally NOT returned -- streamed handles re-derive it
     from the producer at execute time so the source matrix is never resident
     twice.
+
+    ``grid=(MB, NB)`` / ``block_offset=(i0, j0)`` program only the local
+    (mb, nb) window of a larger global block grid: the producer is called with
+    GLOBAL block indices and the per-block keys come from the global
+    :func:`block_keys` schedule (see :func:`local_block_keys`), so a
+    mesh-sharded program writes exactly the same conductance image, block for
+    block, as the single-device sweep.  The offsets may be traced scalars
+    (``jax.lax.axis_index`` inside shard_map).
     """
-    keys = block_keys(key, mb, nb)
+    i0, j0 = block_offset
+    keys = local_block_keys(key, mb, nb, i0, j0, grid)
 
     def row_step(_, row_xs):
         row_keys, i = row_xs
@@ -370,10 +448,10 @@ def streamed_program_blocks(
             k_a, _k_x = jax.random.split(k)
             return None, encode_tiled(block_fn(i, j), k_a, cfg)
 
-        _, at_row = jax.lax.scan(col_step, None, (row_keys, jnp.arange(nb)))
+        _, at_row = jax.lax.scan(col_step, None, (row_keys, j0 + jnp.arange(nb)))
         return None, at_row
 
-    _, at_blocks = jax.lax.scan(row_step, None, (keys, jnp.arange(mb)))
+    _, at_blocks = jax.lax.scan(row_step, None, (keys, i0 + jnp.arange(mb)))
     return at_blocks
 
 
@@ -388,6 +466,8 @@ def streamed_block_mvm(
     n: int,
     use_kernel: bool = False,
     tier2: bool = True,
+    block_offset=(0, 0),
+    grid: Optional[Tuple[int, int]] = None,
 ) -> jnp.ndarray:
     """Scan-fused execute stage over a streamed block producer.
 
@@ -407,7 +487,14 @@ def streamed_block_mvm(
     program-then-execute) and immediately consumed, so no programmed image is
     ever resident -- O(one block) memory, the dataflow of the deprecated
     :func:`streamed_corrected_mvm` shim at paper scale.
+
+    ``grid`` / ``block_offset`` select a local window of a global block grid
+    exactly as in :func:`streamed_program_blocks` (global producer indices,
+    global key schedule); ``m``/``n``/``xb`` are then the LOCAL row/column
+    footprint of that window -- the shard_map per-device view.  Column-partial
+    psums and tier-2 denoise stay with the caller (``tier2=False``).
     """
+    i0, j0 = block_offset
     oneshot = at_blocks is None
     if oneshot:
         cap_m, cap_n = cfg.geom.capacity
@@ -419,7 +506,7 @@ def streamed_block_mvm(
         raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
     x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
     x_chunks = x_pad.reshape(nb, cap_n, batch)
-    keys = block_keys(key, mb, nb)
+    keys = local_block_keys(key, mb, nb, i0, j0, grid)
 
     def row_step(_, row_xs):
         if oneshot:
@@ -450,13 +537,13 @@ def streamed_block_mvm(
             return acc + (at_blk @ x_blk + (a_blk - at_blk) @ x_t), None
 
         acc0 = jnp.zeros((cap_m, batch), jnp.float32)
-        col_xs = (row_keys, jnp.arange(nb), x_chunks) if oneshot else \
-            (at_row, row_keys, jnp.arange(nb), x_chunks)
+        col_xs = (row_keys, j0 + jnp.arange(nb), x_chunks) if oneshot else \
+            (at_row, row_keys, j0 + jnp.arange(nb), x_chunks)
         acc, _ = jax.lax.scan(col_step, acc0, col_xs)
         return None, acc
 
-    row_xs = (keys, jnp.arange(mb)) if oneshot else \
-        (at_blocks, keys, jnp.arange(mb))
+    row_xs = (keys, i0 + jnp.arange(mb)) if oneshot else \
+        (at_blocks, keys, i0 + jnp.arange(mb))
     _, rows = jax.lax.scan(row_step, None, row_xs)
     p = rows.reshape(mb * cap_m, batch)[:m]
     if cfg.ec and tier2:

@@ -4,16 +4,36 @@ The paper distributes chunk pairs to MPI ranks; here each mesh device owns a
 2-D block of the global matrix (rows over ``row_axes``, contraction columns
 over ``col_axis``) and the set of MCA tiles that block maps onto.
 
-Program-once dataflow: :func:`make_distributed_program` writes each device's
-conductance image (and the tier-1 correction operand dA) exactly once,
-returning them still sharded -- the programmed operands are *placed* where
-they will be used, like the physical crossbars they model.
-:func:`make_distributed_programmed_mvm` then executes corrected MVMs against
-those resident operands: local tier-1 partials are aggregated with ``psum``
-over the contraction axis -- the TPU-native image of the paper's MPI reduce --
-and tier-2 denoising runs on-node on each device's output segment (the
-paper's "on-node error correction").  The row partition stays sharded: the
-output is produced already distributed, no gather required.
+Placement and pipeline are orthogonal: each device's *local* stages are the
+shared implementations from :mod:`repro.core.crossbar`, wrapped once in
+``shard_map``.
+
+  * **Dense placement** (:func:`make_distributed_program` /
+    :func:`make_distributed_programmed_mvm`): the global operands exist and
+    are block-sharded over the mesh; each device runs
+    :func:`~repro.core.crossbar.local_program_dense` /
+    :func:`~repro.core.crossbar.local_dense_mvm` on its resident block.
+  * **Producer placement** (:func:`make_distributed_streamed_program` /
+    :func:`make_distributed_streamed_mvm`): the global matrix NEVER
+    materializes.  Each device derives its window of the global capacity-block
+    grid from its ``(row, col)`` mesh coordinates and runs the scan-fused
+    :func:`~repro.core.crossbar.streamed_program_blocks` /
+    :func:`~repro.core.crossbar.streamed_block_mvm` pipelines over only its
+    local blocks, with GLOBAL block indices and the GLOBAL ``block_keys``
+    schedule -- so the programmed image and every DAC draw are identical,
+    block for block, to the single-device streamed sweep (a 1x1 mesh is
+    draw-identical to ``execution="streamed"``).
+
+In both placements the programmed operands are written exactly once and stay
+resident where they will be used, like the physical crossbars they model;
+MVMs run tier-1 locally (optionally through the fused Pallas tile step -- see
+:func:`pallas_shard_map_supported`), aggregate partials with ``psum`` over the
+contraction axis -- the TPU-native image of the paper's MPI reduce -- and run
+tier-2 denoising on-node on each device's output segment (the paper's
+"on-node error correction").  The row partition stays sharded: the output is
+produced already distributed, no gather required, which is what lets a whole
+iterative solve (:mod:`repro.solvers`) keep its x/r/p panels sharded across
+the ``lax.while_loop``.
 
 :class:`repro.engine.AnalogEngine` with ``execution="distributed"`` is the
 public interface; :func:`distributed_corrected_mvm` remains as a one-shot
@@ -24,26 +44,31 @@ reported as the mean across MCAs (mean across devices here).
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .compat import shard_map
-from .crossbar import (CrossbarConfig, assemble_blocks, input_write_cost,
-                       matrix_write_cost, program_blocks, programmed_block_mvm,
+from .crossbar import (CrossbarConfig, input_write_cost, local_dense_mvm,
+                       local_program_dense, matrix_write_cost,
+                       streamed_block_mvm, streamed_program_blocks,
                        write_cost)
 from .error_correction import denoise_least_square
-from .virtualization import block_partition
 from .write_verify import WriteStats
 
 __all__ = [
     "distributed_corrected_mvm",
     "shard_matrix",
+    "mesh_grid_shape",
     "make_distributed_program",
     "make_distributed_programmed_mvm",
+    "make_distributed_streamed_program",
+    "make_distributed_streamed_mvm",
+    "pallas_shard_map_supported",
 ]
 
 
@@ -57,6 +82,25 @@ def _device_key(key: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
     for ax in axes:
         key = jax.random.fold_in(key, jax.lax.axis_index(ax))
     return key
+
+
+def mesh_grid_shape(mesh: Mesh, row_axes: Tuple[str, ...],
+                    col_axis: str) -> Tuple[int, int]:
+    """(R, C): how many ways the mesh splits rows and contraction columns."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    r = 1
+    for ax in row_axes:
+        r *= sizes[ax]
+    return r, sizes[col_axis]
+
+
+def _row_index(row_axes: Tuple[str, ...]) -> jax.Array:
+    """This device's row-shard index: row-major over ``row_axes`` (in-trace)."""
+    from .compat import axis_size
+    idx = jnp.int32(0)
+    for ax in row_axes:
+        idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
 
 
 def _mean_stats(stats: WriteStats, axes: Tuple[str, ...]) -> WriteStats:
@@ -86,10 +130,9 @@ def make_distributed_program(
     def local_fn(a_blk, key):
         k = _device_key(key, axes)
         m_loc, n_loc = a_blk.shape
-        at_b, da_b = program_blocks(a_blk, k, cfg)
+        at, da = local_program_dense(a_blk, k, cfg)
         stats = _mean_stats(matrix_write_cost(m_loc, n_loc, cfg), axes)
-        return (assemble_blocks(at_b, m_loc, n_loc),
-                assemble_blocks(da_b, m_loc, n_loc), stats)
+        return at, da, stats
 
     row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
     return shard_map(
@@ -107,14 +150,18 @@ def make_distributed_programmed_mvm(
     col_axis: str = "model",
     *,
     stats_include_matrix: bool = False,
+    use_kernel: bool = False,
 ):
     """Build the shard_map'd execute stage (unjitted, lowerable).
 
     Returned fn: (a_tilde, da, x (n, batch), key) -> (y (m, batch) row-sharded,
     WriteStats).  Performs zero matrix-encode work: tier-1 runs against the
-    resident operands, partials psum over ``col_axis``, tier-2 denoises
-    on-node.  ``stats_include_matrix=True`` reproduces the legacy one-shot
-    accounting (programming + input writes in a single figure).
+    resident operands via the shared per-device stage
+    (:func:`~repro.core.crossbar.local_dense_mvm`; ``use_kernel=True``
+    dispatches its tile products to the fused Pallas kernel -- gate on
+    :func:`pallas_shard_map_supported`), partials psum over ``col_axis``,
+    tier-2 denoises on-node.  ``stats_include_matrix=True`` reproduces the
+    legacy one-shot accounting (programming + input writes in one figure).
     """
     axes = tuple(row_axes) + (col_axis,)
 
@@ -122,10 +169,8 @@ def make_distributed_programmed_mvm(
         k = _device_key(key, axes)
         m_loc, n_loc = at_blk.shape
         batch = x_blk.shape[1]
-        p = programmed_block_mvm(
-            block_partition(at_blk, cfg.geom),
-            block_partition(da_blk, cfg.geom),
-            x_blk, k, cfg, m=m_loc, n=n_loc, tier2=False)
+        p = local_dense_mvm(at_blk, da_blk, x_blk, k, cfg,
+                            tier2=False, use_kernel=use_kernel)
         p = jax.lax.psum(p, axis_name=col_axis)
         if cfg.ec:
             p = denoise_least_square(
@@ -137,13 +182,175 @@ def make_distributed_programmed_mvm(
         return p, _mean_stats(stats, axes)
 
     row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    kwargs = {}
+    if use_kernel:
+        # pallas_call has no replication rule; the probe gates lowering, the
+        # psum above makes the row partials exact regardless of the checker.
+        kwargs["check_vma"] = False
     return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(row_spec, col_axis), P(row_spec, col_axis),
                   P(col_axis, None), P()),
         out_specs=(P(row_spec, None), P()),
+        **kwargs,
     )
+
+
+# --------------------------------------------------------------------------- #
+# Producer-driven placement (the matrix never materializes anywhere)
+# --------------------------------------------------------------------------- #
+
+def make_distributed_streamed_program(
+    block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    mb: int,
+    nb: int,
+):
+    """Build the shard_map'd producer-driven program stage (unjitted).
+
+    Returned fn: (key,) -> at_blocks (mb, nb, cap_m, cap_n) block-sharded over
+    (``row_axes``, ``col_axis``).  Each device derives its window of the
+    global block grid from its mesh coordinates and runs ONE scan-fused
+    :func:`~repro.core.crossbar.streamed_program_blocks` sweep over only its
+    local blocks -- the source matrix is never materialized on any host or
+    device, and the per-block keys come from the global ``block_keys``
+    schedule so the image is identical to the single-device streamed program.
+    Requires ``mb % R == 0`` and ``nb % C == 0`` (validated by the engine).
+    """
+    r_count, c_count = mesh_grid_shape(mesh, row_axes, col_axis)
+    mb_loc, nb_loc = mb // r_count, nb // c_count
+
+    def local_fn(key):
+        i0 = _row_index(row_axes) * mb_loc
+        j0 = jax.lax.axis_index(col_axis) * nb_loc
+        return streamed_program_blocks(
+            block_fn, key, cfg, mb_loc, nb_loc,
+            block_offset=(i0, j0), grid=(mb, nb))
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(),),
+        out_specs=P(row_spec, col_axis, None, None),
+        check_vma=False,   # output varies with axis_index, not with an input
+    )
+
+
+def make_distributed_streamed_mvm(
+    block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    m: int,
+    n: int,
+    mb: int,
+    nb: int,
+    resident: bool = True,
+    use_kernel: bool = False,
+):
+    """Build the shard_map'd producer-driven execute stage (unjitted).
+
+    Returned fn: ``(at_blocks, x, key) -> y`` when ``resident``, else
+    ``(x, key) -> y`` -- ``x`` is the global (n, batch) panel (sharded or
+    resharded over ``col_axis`` on entry), ``y`` the global (m, batch) output
+    which STAYS row-sharded over ``row_axes`` (no gather), so solver panels
+    remain distributed across a whole ``lax.while_loop``.
+
+    Each device runs ONE scan-fused
+    :func:`~repro.core.crossbar.streamed_block_mvm` over its local window of
+    the global block grid (global producer indices, global key schedule):
+    input-DAC encode, per-block dA re-derivation, tier-1 EC (``use_kernel``
+    fuses the Pallas tile step), fp32 row accumulation.  Tier-1 partials psum
+    over ``col_axis``; tier-2 denoise runs on-node on the local output
+    segment.  ``resident=False`` selects the one-shot scan variant: each
+    block is re-encoded inside the scan body (draws identical to
+    program-then-execute) and immediately consumed, so NO device ever holds
+    more than O(one capacity block) of A -- the paper's >= 65,536^2 regime.
+    """
+    r_count, c_count = mesh_grid_shape(mesh, row_axes, col_axis)
+    mb_loc, nb_loc = mb // r_count, nb // c_count
+    cap_m, cap_n = cfg.geom.capacity
+    # Local logical footprint: exact-capacity shards except on a 1-way axis,
+    # where the single device owns the (possibly padded) global edge.
+    m_loc = m if r_count == 1 else mb_loc * cap_m
+    n_loc = n if c_count == 1 else nb_loc * cap_n
+
+    def local_fn(*args):
+        if resident:
+            at_loc, x_blk, key = args
+        else:
+            (x_blk, key), at_loc = args, None
+        i0 = _row_index(row_axes) * mb_loc
+        j0 = jax.lax.axis_index(col_axis) * nb_loc
+        p = streamed_block_mvm(
+            block_fn, at_loc, x_blk, key, cfg, m=m_loc, n=n_loc,
+            use_kernel=use_kernel, tier2=False,
+            block_offset=(i0, j0), grid=(mb, nb))
+        p = jax.lax.psum(p, axis_name=col_axis)
+        if cfg.ec:
+            p = denoise_least_square(
+                p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+        return p
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    at_spec = (P(row_spec, col_axis, None, None),) if resident else ()
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=at_spec + (P(col_axis, None), P()),
+        out_specs=P(row_spec, None),
+        check_vma=False,   # axis_index-derived block windows defeat the
+                           # static replication checker; psum is still exact
+    )
+
+
+# Cached capability probes: (backend, mesh shape) -> bool.
+_PALLAS_PROBE_CACHE: dict = {}
+
+
+def pallas_shard_map_supported(mesh: Mesh) -> bool:
+    """Can the fused Pallas EC tile step lower inside ``shard_map`` here?
+
+    Compiles (never runs) a one-tile :func:`repro.kernels.ops.rram_ec_tile_mvm`
+    wrapped in a trivial shard_map over ``mesh``.  On CPU the kernels run in
+    interpret mode and this always succeeds; on accelerator backends whose
+    Mosaic/Triton lowering rejects the manual-sharding context, the probe
+    fails once per (backend, mesh shape), emits a warning, and the engine
+    falls back to the reference tile step inside the same scan pipeline --
+    the documented behavior of ``backend="pallas"`` +
+    ``execution="distributed"`` (numerics are identical either way; only the
+    kernel fusion is lost).
+    """
+    cache_key = (jax.default_backend(), tuple(mesh.devices.shape))
+    if cache_key in _PALLAS_PROBE_CACHE:
+        return _PALLAS_PROBE_CACHE[cache_key]
+    try:
+        from repro.kernels import ops as kops
+
+        def local(x):
+            eye = jnp.eye(8, dtype=jnp.float32)
+            return kops.rram_ec_tile_mvm(x, x, eye, jnp.zeros_like(eye))
+
+        probe = shard_map(local, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                          check_vma=False)
+        jax.jit(probe).lower(jnp.zeros((8, 1), jnp.float32)).compile()
+        ok = True
+    except Exception as exc:  # pragma: no cover - backend-specific
+        warnings.warn(
+            "backend='pallas' cannot lower inside shard_map on this "
+            f"backend/mesh ({exc!r}); distributed execution falls back to "
+            "the reference tile step (same numerics, no kernel fusion)")
+        ok = False
+    _PALLAS_PROBE_CACHE[cache_key] = ok
+    return ok
 
 
 def distributed_corrected_mvm(

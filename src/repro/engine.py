@@ -16,9 +16,49 @@ One ``execution=`` switch selects where the programmed image lives:
                          the source matrix never materializes (the paper's
                          65,025^2 case); the encoded tiles are kept;
   * ``"distributed"`` -- the image is placed once, block-sharded over a JAX
-                         device mesh via :func:`repro.core.distributed.shard_matrix`;
-                         MVMs run tier-1 locally, psum partials over the
-                         contraction axis and denoise on-node.
+                         device mesh.  ``program`` accepts a dense array
+                         (sharded via :func:`repro.core.distributed.shard_matrix`)
+                         OR a traceable ``block_fn(i, j)`` producer, in which
+                         case each device derives its window of the global
+                         block grid from its mesh coordinates and scan-programs
+                         only its local blocks -- the global matrix is never
+                         materialized on any host or device.  MVMs run tier-1
+                         locally, psum partials over the contraction axis and
+                         denoise on-node; the output stays row-sharded.
+
+Placement x pipeline matrix (which combinations fuse, which fall back)::
+
+    execution     source      backend=reference          backend=pallas
+    ------------  ----------  -------------------------  ------------------------
+    local         dense a     vmapped block pipeline     fused rram_ec_matmul
+                                                         (one whole-image kernel)
+    streamed      traceable   ONE lax.scan dispatch per  same scan, tile step =
+                  block_fn    program / MVM              rram_ec_tile_mvm kernel
+    streamed      opaque      host loop, one jitted      host loop, kernel tile
+                  block_fn    dispatch per block         step per block
+    distributed   dense a     shard_map over the shared  shard_map'd kernel tile
+                              local_dense_mvm stage      step (capability probe)
+    distributed   traceable   shard_map'd scan pipeline  shard_map'd scan with
+                  block_fn    per device, ONE dispatch,  the kernel tile step
+                              psum partials              (capability probe)
+    distributed   opaque      rejected (cannot trace inside shard_map; use
+                  block_fn    execution="streamed" for the host-loop fallback)
+
+``backend="pallas"`` under ``execution="distributed"`` is gated by
+:func:`repro.core.distributed.pallas_shard_map_supported`, a compile-only
+probe run once per (backend, mesh shape): where the kernel cannot lower
+inside shard_map the engine warns and falls back to the reference tile step
+in the same scan pipeline -- identical numerics, only the kernel fusion is
+lost.  Producer-driven distributed programming requires the block grid to
+divide evenly over the mesh (``mb % R == 0``, ``nb % C == 0``; row/column
+sizes must be capacity multiples on axes split more than one way).
+
+``program(block_fn, ..., resident=False)`` (distributed only) keeps NO
+conductance image resident: every MVM re-encodes each block inside the scan
+body (draws identical to program-then-execute), so no device ever holds more
+than O(one capacity block) of A -- the paper's >= 65,536^2 solves run with
+zero A-sized allocations anywhere in the program (write energy is still
+billed once, as the physical hardware would).
 
 Traceable block producers (streamed execution)
 ----------------------------------------------
@@ -130,9 +170,13 @@ class AnalogMatrix:
     # whether block_fn traced as a pure jax function of the index scalars
     # (scan-fused single-dispatch pipelines) or needs the host loop.
     block_traceable: bool = False
-    # distributed layout: dense (m, n) arrays block-sharded over the mesh.
+    # distributed dense layout: (m, n) arrays block-sharded over the mesh.
     at_dense: Optional[jnp.ndarray] = None
     da_dense: Optional[jnp.ndarray] = None
+    # producer-driven distributed layout: at_blocks is the global (mb, nb,
+    # cap_m, cap_n) block array sharded over the mesh (None for
+    # resident=False handles, which re-encode inside every MVM's scan).
+    mesh_sharded: bool = False
     calls: int = 0
     # cached dense padded layout for the pallas backend (built on first use).
     _padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
@@ -148,12 +192,29 @@ class AnalogMatrix:
     def n(self) -> int:
         return self.shape[1]
 
+    def _grid(self) -> Tuple[int, int]:
+        """(mb, nb) capacity-block grid of this handle."""
+        if self.at_blocks is not None:
+            return self.at_blocks.shape[:2]
+        cap_m, cap_n = self.engine.cfg.geom.capacity
+        return -(-self.m // cap_m), -(-self.n // cap_n)
+
     @property
     def a_tilde(self) -> jnp.ndarray:
-        """The programmed conductance image, dense and unpadded (m, n)."""
+        """The programmed conductance image, dense and unpadded (m, n).
+
+        An explicitly materializing view: for non-resident (``resident=False``)
+        distributed handles it re-derives the image with one scanned sweep.
+        """
         if self.at_dense is not None:
             return self.at_dense
-        return _assemble(self.at_blocks, self.m, self.n)
+        if self.at_blocks is not None:
+            return _assemble(self.at_blocks, self.m, self.n)
+        mb, nb = self._grid()
+        at = jax.jit(functools.partial(
+            crossbar.streamed_program_blocks, self.block_fn,
+            cfg=self.engine.cfg, mb=mb, nb=nb))(self.base_key)
+        return _assemble(at, self.m, self.n)
 
     @property
     def da(self) -> jnp.ndarray:
@@ -162,8 +223,10 @@ class AnalogMatrix:
             return self.da_dense
         if self.da_blocks is not None:
             return _assemble(self.da_blocks, self.m, self.n)
-        return _assemble(self._producer_blocks() - self.at_blocks,
-                         self.m, self.n)
+        if self.at_blocks is not None:
+            return _assemble(self._producer_blocks() - self.at_blocks,
+                             self.m, self.n)
+        return self.dense() - self.a_tilde
 
     def dense(self) -> jnp.ndarray:
         """The exact source matrix A = A_tilde + dA, dense unpadded (m, n).
@@ -180,7 +243,7 @@ class AnalogMatrix:
     def _producer_blocks(self) -> jnp.ndarray:
         """All producer blocks, (mb, nb, cap_m, cap_n): one scanned dispatch
         for traceable producers, a host loop for opaque ones."""
-        mb, nb = self.at_blocks.shape[:2]
+        mb, nb = self._grid()
         if self.block_traceable:
             return jax.jit(functools.partial(
                 crossbar.produce_blocks, self.block_fn, mb, nb))()
@@ -259,8 +322,11 @@ class AnalogEngine:
         ``"local"`` | ``"streamed"`` | ``"distributed"``.
     backend:
         ``"reference"`` (pure jnp) | ``"pallas"`` (fused TPU kernels; interpret
-        mode on CPU).  Distributed execution always runs the reference path
-        inside ``shard_map``.
+        mode on CPU).  Under ``execution="distributed"`` the Pallas tile step
+        runs inside ``shard_map`` where the capability probe
+        (:func:`repro.core.distributed.pallas_shard_map_supported`) confirms
+        it lowers; otherwise the engine warns once and falls back to the
+        reference tile step (identical numerics).
     mesh, row_axes, col_axis:
         Mesh placement for ``execution="distributed"``: rows shard over
         ``row_axes``, the contraction over ``col_axis``.
@@ -298,6 +364,28 @@ class AnalogEngine:
                 cfg, mesh, self.row_axes, col_axis))
             self._dist_mvm = jax.jit(D.make_distributed_programmed_mvm(
                 cfg, mesh, self.row_axes, col_axis))
+            # dense execute pipelines keyed by use_kernel (pallas built
+            # lazily, behind the shard_map capability probe).
+            self._dist_mvm_cache = {False: self._dist_mvm}
+
+    def _dist_use_kernel(self) -> bool:
+        """Whether distributed execution may fuse the Pallas tile step."""
+        if self.backend != "pallas" or not self.cfg.ec:
+            return False
+        from repro.core import distributed as D
+        return D.pallas_shard_map_supported(self.mesh)
+
+    def _dense_dist_exec(self):
+        """The jitted shard_map'd dense execute stage for this backend."""
+        use_kernel = self._dist_use_kernel()
+        fn = self._dist_mvm_cache.get(use_kernel)
+        if fn is None:
+            from repro.core import distributed as D
+            fn = jax.jit(D.make_distributed_programmed_mvm(
+                self.cfg, self.mesh, self.row_axes, self.col_axis,
+                use_kernel=use_kernel))
+            self._dist_mvm_cache[use_kernel] = fn
+        return fn
 
     # ------------------------------------------------------------- programming
     def program(
@@ -306,23 +394,42 @@ class AnalogEngine:
         key: jax.Array,
         *,
         shape: Optional[Tuple[int, int]] = None,
+        resident: bool = True,
     ) -> AnalogMatrix:
         """Write ``a`` onto the analog system once; returns the reusable handle.
 
-        ``a`` is a dense (m, n) array, or -- for ``execution="streamed"`` -- a
-        ``block_fn(i, j)`` producer of capacity-sized (already padded) blocks,
-        in which case ``shape=(m, n)`` gives the logical problem size.
-        Producers that trace as pure jax functions of the index scalars (see
-        the module docstring) are programmed and executed as single-dispatch
-        ``lax.scan`` pipelines; opaque producers take a host loop per block.
+        ``a`` is a dense (m, n) array, or -- for ``execution="streamed"`` and
+        ``execution="distributed"`` -- a ``block_fn(i, j)`` producer of
+        capacity-sized (already padded) blocks, in which case ``shape=(m, n)``
+        gives the logical problem size.  Producers that trace as pure jax
+        functions of the index scalars (see the module docstring) are
+        programmed and executed as single-dispatch ``lax.scan`` pipelines
+        (mesh-sharded windows of the global block grid under distributed
+        execution); opaque producers take a host loop per block (streamed
+        only -- distributed execution rejects them).
+
+        ``resident=False`` (distributed producers only) keeps no conductance
+        image: each MVM re-encodes blocks inside its scan with the identical
+        draws, so no device ever allocates more than one capacity block of A.
         """
         if callable(a) and not hasattr(a, "shape"):
-            if self.execution != "streamed":
-                raise ValueError(
-                    "a block_fn producer requires execution='streamed'")
+            if self.execution not in ("streamed", "distributed"):
+                raise ValueError("a block_fn producer requires "
+                                 "execution='streamed' or 'distributed'")
             if shape is None:
                 raise ValueError("program(block_fn, ...) requires shape=(m, n)")
+            if self.execution == "distributed":
+                return self._program_distributed_streamed(
+                    a, shape, key, resident)
+            if not resident:
+                raise ValueError("resident=False requires "
+                                 "execution='distributed' (streamed handles "
+                                 "keep the programmed image)")
             return self._program_streamed(a, shape, key)
+        if not resident:
+            raise ValueError(
+                "resident=False requires a block_fn producer under "
+                "execution='distributed'")
         m, n = a.shape
         if self.execution == "distributed":
             return self._program_distributed(a, key)
@@ -373,7 +480,54 @@ class AnalogEngine:
         at, da, stats = self._dist_program(a_sh, key)
         return AnalogMatrix(
             engine=self, shape=(m, n), base_key=key, write_stats=stats,
-            at_dense=at, da_dense=da)
+            at_dense=at, da_dense=da, mesh_sharded=True)
+
+    def _program_distributed_streamed(self, block_fn, shape, key,
+                                      resident) -> AnalogMatrix:
+        """Producer-driven distributed programming: each device scan-programs
+        its window of the global block grid; A never materializes anywhere."""
+        from repro.core import distributed as D
+        m, n = shape
+        cap_m, cap_n = self.cfg.geom.capacity
+        mb, nb = -(-m // cap_m), -(-n // cap_n)
+        if not crossbar.producer_is_traceable(block_fn, cap_m, cap_n):
+            raise ValueError(
+                "execution='distributed' requires a traceable block_fn "
+                "producer (a pure jax function of the two index scalars): "
+                "opaque producers cannot run inside shard_map -- use "
+                "execution='streamed' for the host-loop fallback")
+        n_row, n_col = D.mesh_grid_shape(self.mesh, self.row_axes,
+                                         self.col_axis)
+        if mb % n_row or nb % n_col:
+            raise ValueError(
+                f"the {mb} x {nb} capacity-block grid does not divide over "
+                f"the {n_row} x {n_col} mesh; pick a capacity/mesh so every "
+                "device owns an equal block window")
+        if n_row > 1 and m != mb * cap_m:
+            raise ValueError(
+                f"m={m} must be a multiple of the capacity row size {cap_m} "
+                "to row-shard a producer grid (produce padded blocks and "
+                "declare the padded shape)")
+        if n_col > 1 and n != nb * cap_n:
+            raise ValueError(
+                f"n={n} must be a multiple of the capacity column size "
+                f"{cap_n} to column-shard a producer grid")
+        at_blocks = None
+        if resident:
+            # ONE jitted dispatch programs every device's block window.
+            prog = jax.jit(D.make_distributed_streamed_program(
+                block_fn, self.cfg, self.mesh, self.row_axes, self.col_axis,
+                mb=mb, nb=nb))
+            at_blocks = prog(key)
+        # Per-device footprint; mean across the uniform shards == per-device
+        # value (the Figs. 4-5 reporting convention).
+        m_loc = m if n_row == 1 else (mb // n_row) * cap_m
+        n_loc = n if n_col == 1 else (nb // n_col) * cap_n
+        return AnalogMatrix(
+            engine=self, shape=(m, n), base_key=key,
+            write_stats=crossbar.matrix_write_cost(m_loc, n_loc, self.cfg),
+            at_blocks=at_blocks, block_fn=block_fn, block_traceable=True,
+            mesh_sharded=True)
 
     def encode_dense(self, a: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
         """The programmed image of ``a`` as a dense unpadded array.
@@ -421,11 +575,16 @@ class AnalogEngine:
             raise ValueError("AnalogMatrix was programmed by an incompatible "
                              "engine configuration")
         if self.execution == "distributed":
-            if A.at_dense is None:
+            # Only handles programmed BY a distributed engine may execute
+            # here: producer handles from a streamed engine skipped the
+            # mesh/grid validation (mb % R, capacity multiples, traceability)
+            # and would mis-shape or die opaquely inside shard_map.
+            if A.at_dense is None and not (A.block_fn is not None
+                                           and A.mesh_sharded):
                 raise ValueError(
                     "AnalogMatrix holds block tiles but this engine executes "
                     "distributed; program it with the distributed engine")
-        elif A.at_blocks is None:
+        elif A.at_blocks is None or A.mesh_sharded:
             raise ValueError(
                 "AnalogMatrix holds mesh-sharded operands but this engine "
                 f"executes {self.execution!r}; program it with this engine")
@@ -449,7 +608,16 @@ class AnalogEngine:
         A.calls += 1
         m, n = A.shape
         if self.execution == "distributed":
-            p, stats = self._dist_mvm(A.at_dense, A.da_dense, xb, key)
+            if A.at_dense is not None:
+                p, stats = self._dense_dist_exec()(A.at_dense, A.da_dense,
+                                                   xb, key)
+            else:
+                # Producer-driven: ONE shard_map'd scan dispatch, output
+                # stays row-sharded; per-call cost is analytic (the same
+                # ceil-divided per-device mean as input_write_stats).
+                p = self._exec_dist_streamed(A, xb, key)
+                stats = self.input_write_stats(A, xb.shape[1]) \
+                    if with_stats else None
         else:
             stats = None
             if A.da_blocks is None:
@@ -503,6 +671,31 @@ class AnalogEngine:
                 A._scan_exec[use_kernel] = fn
             return fn(A.at_blocks, xb, key)
         return self._exec_streamed_host(A, xb, key, use_kernel)
+
+    def _exec_dist_streamed(self, A, xb, key):
+        """Producer-driven distributed execute: each device runs the
+        scan-fused streamed pipeline over its window of the global block
+        grid (one dispatch), partials psum over the contraction axis, tier-2
+        denoises on-node, and the output stays row-sharded.  The jitted
+        shard_map pipeline is cached on the handle per backend, so solver
+        loops re-enter a warm trace."""
+        use_kernel = self._dist_use_kernel()
+        cache_key = ("dist", use_kernel, A.at_blocks is not None)
+        fn = (A._scan_exec or {}).get(cache_key)
+        if fn is None:
+            from repro.core import distributed as D
+            m, n = A.shape
+            mb, nb = A._grid()
+            fn = jax.jit(D.make_distributed_streamed_mvm(
+                A.block_fn, self.cfg, self.mesh, self.row_axes, self.col_axis,
+                m=m, n=n, mb=mb, nb=nb, resident=A.at_blocks is not None,
+                use_kernel=use_kernel))
+            if A._scan_exec is None:
+                A._scan_exec = {}
+            A._scan_exec[cache_key] = fn
+        if A.at_blocks is not None:
+            return fn(A.at_blocks, xb, key)
+        return fn(xb, key)
 
     def _exec_streamed_host(self, A, xb, key, use_kernel):
         """The compat-only Python block loop (the one remaining in the repo):

@@ -106,6 +106,10 @@ def as_operator(
         # the engine's scan-fused pipeline inline (one dispatch per MVM), and
         # ``dense()`` reconstructs A with a single producer sweep (used by
         # jacobi's diagonal and refine's digital outer residual).
+        # Distributed handles stay distributed: the matvec's output is
+        # row-sharded straight out of shard_map, and because the solver
+        # reductions are plain per-column jnp ops, GSPMD keeps the x/r/p
+        # panels sharded across the whole jitted while_loop -- no gathers.
         eng = A.engine
         return LinearOperator(
             matvec=lambda v, k: eng.mvm(A, v, key=k),
@@ -180,7 +184,12 @@ class SolveResult:
     ``residuals`` is the per-iteration relative residual ``||r_k|| / ||b||``,
     shaped (maxiter,) for a vector RHS or (maxiter, batch) for multi-RHS;
     entries past ``iterations`` are NaN.  For restarted GMRES one "iteration"
-    is one restart cycle.
+    is one restart cycle.  ``initial_residual`` is the worst-column relative
+    residual at ENTRY (after the init MVM, before any update): a solve that
+    is already converged there stops at ``iterations == 0`` with an all-NaN
+    history, and ``final_residual``/``converged`` report the entry residual
+    instead of the old dishonest ``-inf`` / ``False``.  Solvers without an
+    init MVM (the stationary methods always run >= 1 iteration) leave it NaN.
     """
 
     x: jnp.ndarray
@@ -189,15 +198,18 @@ class SolveResult:
     converged: bool
     ledger: SolveLedger
     solver: str
+    initial_residual: float = float("nan")
 
     @property
     def final_residual(self) -> float:
-        """Worst-column relative residual at the last recorded iteration."""
+        """Worst-column relative residual at the last recorded iteration (the
+        entry residual when the solve converged before iterating)."""
+        if self.iterations == 0:
+            return self.initial_residual
         r = self.residuals if self.residuals.ndim == 2 \
             else self.residuals[:, None]
         last = jnp.nanmax(jnp.where(jnp.isnan(r), -jnp.inf, r), axis=1)
-        idx = max(self.iterations - 1, 0)
-        return float(last[idx])
+        return float(last[self.iterations - 1])
 
     def __repr__(self) -> str:  # keep large arrays out of logs
         m, b = (self.residuals.shape + (1,))[:2]
@@ -219,14 +231,20 @@ def pack_result(
     tol: float,
     squeeze: bool,
     mvms_single: int = 0,
+    rel0=None,
 ) -> SolveResult:
     """Assemble a :class:`SolveResult` from a jitted core's raw outputs.
 
     ``mvms`` are full-batch solve MVMs; ``mvms_single`` are batch-1 setup
     MVMs (spectral estimates), billed at the batch-1 input-write rate.
+    ``rel0`` is the per-column relative residual at entry (from the core's
+    init MVM), which makes iteration-0 convergence honest: zero RHS or an
+    exact ``x0`` yields ``converged=True`` with ``final_residual == rel0``
+    rather than ``False`` / ``-inf``.
     """
     batch = x.shape[1]
     iterations = int(iterations)
+    initial = float(jnp.max(rel0)) if rel0 is not None else float("nan")
     res = SolveResult(
         x=x[:, 0] if squeeze else x,
         residuals=hist[:, 0] if squeeze else hist,
@@ -238,6 +256,9 @@ def pack_result(
                            input_stats_single=op.input_stats(1),
                            mvms_single=int(mvms_single)),
         solver=solver,
+        initial_residual=initial,
     )
-    res.converged = iterations > 0 and res.final_residual <= tol
+    # NaN-robust: a NaN final residual (breakdown, or iteration 0 with no
+    # recorded entry residual) compares False and stays not-converged.
+    res.converged = bool(res.final_residual <= tol)
     return res

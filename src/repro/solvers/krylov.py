@@ -7,6 +7,13 @@ against every :class:`~repro.engine.AnalogEngine` execution mode (``local`` /
 convergence test is per-column -- and the whole solve (including the
 ``lax.while_loop`` early stopping) traces into one jitted computation.
 
+Distributed operands stay distributed: a producer-driven
+``execution="distributed"`` handle's matvec emits its output row-sharded from
+shard_map, and since every reduction here is a per-column ``jnp.sum`` /
+norm (scalars replicate, panels never reshape), GSPMD propagates the row
+sharding through the whole while_loop -- a sharded CG solve is ONE compiled
+program whose x/r/p panels never gather onto a single device.
+
 Analog caveat, and why these still work here: each MVM carries fresh DAC
 noise, so Krylov recurrences see a slightly *inexact* operator.  With the
 two-tier error correction on, the per-MVM relative error is ~1e-3, which
@@ -88,11 +95,12 @@ def _cg_core(op: LinearOperator, b, x0, key, *, tol: float, maxiter: int,
         hist = hist.at[k].set(rel)
         return k + 1, x, r, p, rho_new, hist, rel, mvms + 1
 
+    rel0 = jnp.sqrt(rho0) / bn
     state0 = (jnp.int32(0), x0, r0, r0, rho0, init_history(maxiter, batch),
-              jnp.sqrt(rho0) / bn, jnp.int32(1))
+              rel0, jnp.int32(1))
     k, x, _r, _p, _rho, hist, _rel, mvms = jax.lax.while_loop(
         cond, body, state0)
-    return x, hist, k, mvms
+    return x, hist, k, mvms, rel0
 
 
 def cg(
@@ -111,8 +119,8 @@ def cg(
     key = jax.random.PRNGKey(0) if key is None else key
     core = jax.jit(functools.partial(_cg_core, op, tol=tol, maxiter=maxiter,
                                      use_pallas=use_pallas(backend)))
-    x, hist, k, mvms = core(bb, x0b, key)
-    return pack_result(op, "cg", x, hist, k, mvms, tol, squeeze)
+    x, hist, k, mvms, rel0 = core(bb, x0b, key)
+    return pack_result(op, "cg", x, hist, k, mvms, tol, squeeze, rel0=rel0)
 
 
 # --------------------------------------------------------------------------- #
@@ -148,11 +156,12 @@ def _bicgstab_core(op: LinearOperator, b, x0, key, *, tol: float,
         hist = hist.at[k].set(rel)
         return (k + 1, x, r, p, v, rho_new, alpha, w, hist, rel, mvms + 2)
 
+    rel0 = col_norms(r0) / bn
     state0 = (jnp.int32(0), x0, r0, zeros_p, zeros_p, ones, ones, ones,
-              init_history(maxiter, batch), col_norms(r0) / bn, jnp.int32(1))
+              init_history(maxiter, batch), rel0, jnp.int32(1))
     out = jax.lax.while_loop(cond, body, state0)
     k, x, hist, mvms = out[0], out[1], out[8], out[10]
-    return x, hist, k, mvms
+    return x, hist, k, mvms, rel0
 
 
 def bicgstab(
@@ -170,8 +179,9 @@ def bicgstab(
     key = jax.random.PRNGKey(0) if key is None else key
     core = jax.jit(functools.partial(_bicgstab_core, op, tol=tol,
                                      maxiter=maxiter))
-    x, hist, k, mvms = core(bb, x0b, key)
-    return pack_result(op, "bicgstab", x, hist, k, mvms, tol, squeeze)
+    x, hist, k, mvms, rel0 = core(bb, x0b, key)
+    return pack_result(op, "bicgstab", x, hist, k, mvms, tol, squeeze,
+                       rel0=rel0)
 
 
 # --------------------------------------------------------------------------- #
@@ -241,10 +251,11 @@ def _gmres_core(op: LinearOperator, b, x0, key, *, tol: float, maxiter: int,
         hist = hist.at[c].set(rel)
         return c + 1, x, r, rel, hist, mvms + restart + 1
 
-    state0 = (jnp.int32(0), x0, r0, col_norms(r0) / bn,
+    rel0 = col_norms(r0) / bn
+    state0 = (jnp.int32(0), x0, r0, rel0,
               init_history(ncycles, batch), jnp.int32(1))
     c, x, _r, _rel, hist, mvms = jax.lax.while_loop(cond, body, state0)
-    return x, hist, c, mvms
+    return x, hist, c, mvms, rel0
 
 
 def gmres(
@@ -268,5 +279,5 @@ def gmres(
     key = jax.random.PRNGKey(0) if key is None else key
     core = jax.jit(functools.partial(_gmres_core, op, tol=tol,
                                      maxiter=maxiter, restart=restart))
-    x, hist, c, mvms = core(bb, x0b, key)
-    return pack_result(op, "gmres", x, hist, c, mvms, tol, squeeze)
+    x, hist, c, mvms, rel0 = core(bb, x0b, key)
+    return pack_result(op, "gmres", x, hist, c, mvms, tol, squeeze, rel0=rel0)

@@ -113,11 +113,12 @@ def refine(
             hist = hist.at[k].set(rel)
             return k + 1, x, r, rel, hist, mvms + inner_mvms
 
-        state0 = (jnp.int32(0), x0, r0, col_norms(r0) / bn,
+        rel0 = col_norms(r0) / bn
+        state0 = (jnp.int32(0), x0, r0, rel0,
                   init_history(maxiter, batch), jnp.int32(0))
         k, x, _r, _rel, hist, mvms = jax.lax.while_loop(cond, body, state0)
-        return x, hist, k, mvms
+        return x, hist, k, mvms, rel0
 
-    x, hist, k, mvms = jax.jit(core)(bb, x0b, key)
+    x, hist, k, mvms, rel0 = jax.jit(core)(bb, x0b, key)
     return pack_result(op, f"refine[{inner}]", x, hist, k, mvms, tol, squeeze,
-                       mvms_single=mvms_single)
+                       mvms_single=mvms_single, rel0=rel0)

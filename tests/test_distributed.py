@@ -11,12 +11,12 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_child(code: str) -> dict:
+def run_child(code: str, timeout: int = 600) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=600)
+                         text=True, env=env, timeout=timeout)
     assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
     return json.loads(out.stdout.splitlines()[-1])
 
@@ -82,6 +82,176 @@ def test_analog_engine_distributed_program_once():
     # legacy one-shot accounting == program + one input write
     assert abs(res["E_prog"] + res["E_call"] - res["E_legacy"]) \
         <= 1e-6 * res["E_legacy"]
+
+
+def test_distributed_producer_matches_streamed():
+    """Producer-driven distributed programming/MVM on a real 2x4 mesh: the
+    global block-key schedule makes the mesh-sharded image bit-identical to
+    the single-device streamed image; MVM values agree <= 1e-5 across the
+    resident, virtual (resident=False) and pallas-backend paths; the output
+    stays row-sharded."""
+    res = run_child(PRELUDE + textwrap.dedent("""
+        from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
+        from repro.core.distributed import pallas_shard_map_supported
+        from repro.engine import AnalogEngine
+        key = jax.random.PRNGKey(0)
+        cfg = CrossbarConfig(device=get_device("taox-hfox"),
+                             geom=MCAGeometry(1, 1, 32, 32), k_iters=5,
+                             ec=True)
+        n = 256                                   # 8x8 grid of 32^2 blocks
+        a = jax.random.normal(key, (n, n)) / 16
+        blocks = a.reshape(8, 32, 8, 32).transpose(0, 2, 1, 3)
+        producer = lambda i, j: blocks[i, j]
+        x = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+
+        st = AnalogEngine(cfg, execution="streamed")
+        A_s = st.program(producer, key, shape=(n, n))
+        y_s = st.mvm(A_s, x, key=key)
+
+        de = AnalogEngine(cfg, execution="distributed", mesh=mesh)
+        A_d = de.program(producer, key, shape=(n, n))
+        image_equal = bool(jnp.array_equal(A_d.at_blocks, A_s.at_blocks))
+        y_d = de.mvm(A_d, x, key=key)
+        row_sharded = "data" in str(y_d.sharding.spec)
+
+        A_v = de.program(producer, key, shape=(n, n), resident=False)
+        y_v = de.mvm(A_v, x, key=key)
+
+        pallas_ok = pallas_shard_map_supported(mesh)
+        if pallas_ok:
+            dp = AnalogEngine(cfg, execution="distributed", backend="pallas",
+                              mesh=mesh)
+            A_p = dp.program(producer, key, shape=(n, n))
+            pallas_par = float(rel_l2(dp.mvm(A_p, x, key=key), y_d))
+            # dense placement through the same kernel tile step
+            A_pd = dp.program(a, key)
+            A_rd = de.program(a, key)
+            pallas_dense = float(rel_l2(dp.mvm(A_pd, x, key=key),
+                                        de.mvm(A_rd, x, key=key)))
+        else:
+            pallas_par = pallas_dense = -1.0  # documented fallback: reference
+        b = a @ x
+        print(json.dumps({
+            "image_equal": image_equal, "row_sharded": row_sharded,
+            "mvm": float(rel_l2(y_d, y_s)), "virt": float(rel_l2(y_v, y_d)),
+            "pallas_ok": bool(pallas_ok), "pallas": pallas_par,
+            "pallas_dense": pallas_dense,
+            "err": float(rel_l2(y_d, b))}))
+    """))
+    assert res["image_equal"]
+    assert res["row_sharded"]
+    assert res["mvm"] <= 1e-5
+    assert res["virt"] <= 1e-5
+    # pallas either passes reference parity or reported its probe fallback
+    if res["pallas_ok"]:
+        assert res["pallas"] <= 1e-5
+        assert res["pallas_dense"] <= 1e-5
+    assert res["err"] < 0.1
+
+
+def test_distributed_producer_solve():
+    """End-to-end sharded CG through repro.solvers on a 2x4 mesh: one
+    compiled program per solve (producer invoked for traces only), converges,
+    matches the digital oracle, and the virtual handle's jitted MVM never
+    traces an A-sized aval."""
+    res = run_child(PRELUDE + textwrap.dedent("""
+        from repro import solvers
+        from repro.analysis.memory import max_aval_elements
+        from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
+        from repro.engine import AnalogEngine
+        from repro.core.matrices import ImplicitBandedMatrix
+        key = jax.random.PRNGKey(0)
+        cfg = CrossbarConfig(device=get_device("epiram"),
+                             geom=MCAGeometry(1, 1, 32, 32), k_iters=5,
+                             ec=True)
+        n = 256
+        # procedural producer: nothing A-sized ever closes over the pipeline
+        imp = ImplicitBandedMatrix(n=n, cap_m=32, cap_n=32, seed=5)
+        calls = {"n": 0}
+        def producer(i, j):
+            calls["n"] += 1
+            return imp.block(i, j)
+        x_true = jax.random.normal(jax.random.fold_in(key, 1), (n,),
+                                   jnp.float32)
+
+        de = AnalogEngine(cfg, execution="distributed", mesh=mesh)
+        A = de.program(producer, key, shape=(n, n), resident=False)
+        a = A.dense()                      # host-side oracle materialization
+        b = a @ x_true
+        after_program = calls["n"]
+        mx = max_aval_elements(
+            lambda v, k: de.mvm(A, v, key=k),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct(key.shape, key.dtype))
+        res = solvers.cg(A, b, tol=1e-3, maxiter=40)
+        solve_traces = calls["n"] - after_program
+        oracle = jnp.linalg.solve(a, b)
+        print(json.dumps({
+            "iters": int(res.iterations), "converged": bool(res.converged),
+            "resid": float(res.final_residual),
+            "traces": int(solve_traces),
+            "max_elems": int(mx), "A_elems": n * n,
+            "xerr": float(rel_l2(res.x, oracle)),
+            "E": float(res.ledger.total_energy_j)}))
+    """))
+    assert res["converged"] and res["resid"] <= 1e-3
+    assert res["iters"] >= 2
+    # probe excluded at program time; the solve adds at most ~2 traces (the
+    # aval walk + the jitted core) -- never per-block or per-iteration work
+    assert res["traces"] <= 3, res
+    assert res["max_elems"] * 8 <= res["A_elems"], res   # strictly sub-A
+    assert res["xerr"] < 5e-3
+    assert res["E"] > 0
+
+
+@pytest.mark.slow
+def test_distributed_scale_65536():
+    """The acceptance-scale case: n=65,536 >= the paper's largest problem,
+    programmed from a procedural producer over a 2x4 mesh with
+    resident=False and SOLVED (CG) -- converging with no A-sized array ever
+    allocated (statically asserted on the exact jitted MVM)."""
+    res = run_child(PRELUDE + textwrap.dedent("""
+        from repro import solvers
+        from repro.analysis.memory import max_aval_elements
+        from repro.core import CrossbarConfig, MCAGeometry, get_device
+        from repro.engine import AnalogEngine
+        n, cap = 65536, 2048
+        cfg = CrossbarConfig(device=get_device("epiram"),
+                             geom=MCAGeometry(1, 1, cap, cap), k_iters=5,
+                             ec=True)
+        eng = AnalogEngine(cfg, execution="distributed", mesh=mesh)
+        calls = {"n": 0}
+        def producer(i, j):
+            # Deterministic SPD banded generator (traceable, O(block) math):
+            # the n^2 encode noise already dominates the sweep, so the
+            # producer itself stays RNG-free to keep the test CPU-feasible.
+            calls["n"] += 1
+            rows = i * cap + jnp.arange(cap)[:, None]
+            cols = j * cap + jnp.arange(cap)[None, :]
+            dist = jnp.abs(rows - cols)
+            blk = jnp.where(dist <= 8,
+                            1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
+            return blk + 16.0 * (rows == cols)
+        key = jax.random.PRNGKey(0)
+        A = eng.program(producer, key, shape=(n, n), resident=False)
+        mx = max_aval_elements(
+            lambda x, k: eng.mvm(A, x, key=k),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct(key.shape, key.dtype))
+        b = jnp.ones((n,), jnp.float32)
+        res = solvers.cg(A, b, tol=2e-2, maxiter=4, key=key)
+        print(json.dumps({
+            "iters": int(res.iterations), "converged": bool(res.converged),
+            "resid": float(res.final_residual), "calls": calls["n"],
+            "max_elems": int(mx), "A_elems": n * n,
+            "E_write": float(res.ledger.write_energy_j)}))
+    """), timeout=1500)
+    assert res["converged"], res
+    assert res["iters"] >= 1 and res["resid"] <= 2e-2
+    # no A-sized allocation: high-water mark is O(one capacity block)
+    assert res["max_elems"] * 100 <= res["A_elems"], res
+    assert res["calls"] <= 4                      # traces only, never mb*nb
+    assert res["E_write"] > 0
 
 
 def test_compressed_psum_and_ring_matmul():

@@ -230,14 +230,19 @@ def _block_view(a, cfg):
     return a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
 
 
-def _counting_producer(blocks):
-    calls = {"n": 0}
-
+def _counting_wrap(fn, calls):
     def producer(i, j):
         calls["n"] += 1
-        return blocks[i, j]
+        return fn(i, j)
 
-    return producer, calls
+    return producer
+
+
+def _counting_producer(blocks):
+    calls = {"n": 0}
+    if blocks is None:
+        return None, calls
+    return _counting_wrap(lambda i, j: blocks[i, j], calls), calls
 
 
 def test_streamed_traceable_single_dispatch(problem):
@@ -379,6 +384,113 @@ def test_input_write_stats_rounds_up_nondivisible():
                                rtol=1e-6)
     floor = crossbar.input_write_cost(193 // 3, 90 // 4, cfg, batch=2)
     assert float(got.energy_j) > float(floor.energy_j)
+
+
+# ------------------------------------------- distributed producer placement
+def _mesh_1x1():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_distributed_producer_1x1_matches_streamed(problem):
+    """Producer-driven distributed execution on a 1x1 mesh is draw-identical
+    to the single-device streamed path: same global block-key schedule, same
+    scan pipeline, bit-for-bit image, <= 1e-5 values."""
+    a, x = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    streamed = AnalogEngine(cfg, execution="streamed")
+    A_s = streamed.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
+    A_d = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    assert A_d.mesh_sharded and A_d.block_traceable
+    np.testing.assert_array_equal(np.asarray(A_d.at_blocks),
+                                  np.asarray(A_s.at_blocks))
+    y_s = streamed.mvm(A_s, x, key=KEY)
+    y_d = dist.mvm(A_d, x, key=KEY)
+    assert float(rel_l2(y_d, y_s)) <= 1e-5
+    # virtual image (resident=False): every MVM re-encodes inside the scan
+    # with the identical draws -- same result, no image ever resident.
+    A_v = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape,
+                       resident=False)
+    assert A_v.at_blocks is None
+    y_v = dist.mvm(A_v, x, key=KEY)
+    assert float(rel_l2(y_v, y_d)) <= 1e-5
+    # the dense views still reconstruct A from the producer
+    np.testing.assert_allclose(np.asarray(A_v.dense()), np.asarray(a),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(A_v.a_tilde + A_v.da),
+                               np.asarray(a), rtol=1e-4, atol=1e-5)
+
+
+def test_distributed_producer_no_a_sized_allocation(problem):
+    """The virtual distributed pipeline never traces an A-sized aval: its
+    high-water mark is one capacity block (for a procedural producer, the
+    paper-scale regime), and a warm MVM re-invokes the producer zero times
+    (single cached dispatch)."""
+    from repro.analysis.memory import max_aval_elements
+    from repro.core.matrices import ImplicitBandedMatrix
+    cfg = make_cfg()
+    cap_m, cap_n = cfg.geom.capacity       # 64 x 64
+    n = 4 * cap_n                          # 4x4 block grid
+    imp = ImplicitBandedMatrix(n=n, cap_m=cap_m, cap_n=cap_n, seed=2)
+    producer, calls = _counting_producer(None)
+    producer = _counting_wrap(imp.block, calls)
+    dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
+    A = dist.program(producer, KEY, shape=(n, n), resident=False)
+    assert calls["n"] <= 2                   # probe only: nothing programmed
+    mx = max_aval_elements(
+        lambda v, k: dist.mvm(A, v, key=k),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct(KEY.shape, KEY.dtype))
+    # high-water mark well under A: a handful of capacity blocks, never n^2
+    assert mx <= 4 * cap_m * cap_n < n * n, (mx, n * n)
+    before = calls["n"]
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (n,))
+    y1 = dist.mvm(A, x, key=KEY)
+    assert calls["n"] - before <= 1          # one trace
+    warm = calls["n"]
+    y2 = dist.mvm(A, x, key=jax.random.fold_in(KEY, 1))
+    assert calls["n"] == warm                # warm: zero producer work
+    assert y1.shape == y2.shape == (n,)
+
+
+def test_distributed_producer_validation(problem):
+    """Opaque producers, non-dividing grids, and resident=False misuse are
+    rejected with actionable errors."""
+    from types import SimpleNamespace
+    a, _ = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
+    opaque = lambda i, j: blocks[int(i), int(j)]
+    with pytest.raises(ValueError, match="traceable"):
+        dist.program(opaque, KEY, shape=a.shape)
+    with pytest.raises(ValueError, match="resident=False"):
+        AnalogEngine(cfg, execution="streamed").program(
+            lambda i, j: blocks[i, j], KEY, shape=a.shape, resident=False)
+    with pytest.raises(ValueError, match="resident=False"):
+        AnalogEngine(cfg).program(a, KEY, resident=False)
+    # a (2, 4)-way mesh cannot carve this 4x3 block grid evenly
+    fake = AnalogEngine.__new__(AnalogEngine)
+    fake.cfg, fake.execution, fake.backend = cfg, "distributed", "reference"
+    fake.row_axes, fake.col_axis = ("data",), "model"
+    fake.mesh = SimpleNamespace(axis_names=("data", "model"),
+                                devices=np.zeros((2, 4)))
+    with pytest.raises(ValueError, match="does not divide"):
+        fake._program_distributed_streamed(
+            lambda i, j: blocks[i, j], a.shape, KEY, True)
+    # mesh-sharded handles are rejected by local/streamed engines
+    A_d = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    with pytest.raises(ValueError, match="mesh-sharded"):
+        AnalogEngine(cfg).mvm(A_d, jnp.ones((a.shape[1],)))
+    # ... and a STREAMED-programmed producer handle is rejected by a
+    # distributed engine: it skipped the mesh/grid validation, so letting it
+    # into shard_map would mis-shape the output or fail opaquely.
+    A_st = AnalogEngine(cfg, execution="streamed").program(
+        lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    with pytest.raises(ValueError, match="distributed engine"):
+        dist.mvm(A_st, jnp.ones((a.shape[1],)))
 
 
 # -------------------------------------------------------------- pallas backend

@@ -161,6 +161,66 @@ def test_hlo_cost_records_consistent():
 
 
 # ---------------------------------------------------------------- data + FT
+def _load_check_regressions():
+    import importlib.util
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(repo, "tools", "check_regressions.py")
+    spec = importlib.util.spec_from_file_location("check_regressions", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestCheckRegressionsClassname:
+    """The junit classname -> pytest-id mapping, incl. class-based tests
+    (this class doubles as a live fixture: its own junit classname is
+    ``tests.test_framework.TestCheckRegressionsClassname``)."""
+
+    def test_module_level_mapping(self):
+        cr = _load_check_regressions()
+        assert cr.classname_to_id("tests.test_engine", "test_foo") == \
+            "tests/test_engine.py::test_foo"
+
+    def test_class_based_mapping(self):
+        """``tests.test_x.TestFoo`` must map to tests/test_x.py::TestFoo::
+        test_bar, not the impossible tests/test_x/TestFoo.py::test_bar."""
+        cr = _load_check_regressions()
+        got = cr.classname_to_id(
+            "tests.test_framework.TestCheckRegressionsClassname", "test_x")
+        assert got == ("tests/test_framework.py::"
+                       "TestCheckRegressionsClassname::test_x")
+
+    def test_unknown_tree_falls_back(self):
+        cr = _load_check_regressions()
+        assert cr.classname_to_id("other.pkg.mod", "t") == \
+            "other/pkg/mod.py::t"
+        assert cr.classname_to_id("", "bare") == "bare"
+
+    def test_failed_ids_end_to_end(self):
+        cr = _load_check_regressions()
+        xml = """<?xml version="1.0"?>
+        <testsuites><testsuite>
+          <testcase classname="tests.test_framework.TestCheckRegressionsClassname"
+                    name="test_class_based_mapping"><failure/></testcase>
+          <testcase classname="tests.test_core" name="test_ok"/>
+          <testcase classname="tests.test_core" name="test_bad">
+            <error/></testcase>
+        </testsuite></testsuites>"""
+        with tempfile.NamedTemporaryFile("w", suffix=".xml",
+                                         delete=False) as fh:
+            fh.write(xml)
+            path = fh.name
+        try:
+            got = cr.failed_ids(path)
+        finally:
+            os.unlink(path)
+        assert got == {
+            ("tests/test_framework.py::TestCheckRegressionsClassname::"
+             "test_class_based_mapping"),
+            "tests/test_core.py::test_bad",
+        }
+
+
 def test_data_pipeline_determinism():
     from repro.data.pipeline import synthetic_batch
     cfg = get_arch("qwen3-1.7b").reduced()

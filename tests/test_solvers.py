@@ -184,6 +184,62 @@ def test_jacobi_uses_programmed_diagonal():
     assert float(rel_l2(res.x, x_true)) < 5e-3
 
 
+def test_converged_at_entry_is_honest():
+    """Solves already converged at entry (zero RHS, exact x0) must report
+    converged=True with a finite entry residual, not False / -inf (the
+    ROADMAP pack_result item)."""
+    a, x_true, b = spd_system(64)
+    for fn in (solvers.cg, solvers.bicgstab, solvers.gmres, solvers.refine):
+        res = fn(a, jnp.zeros((64,)), tol=1e-6, maxiter=50)
+        assert res.iterations == 0, res
+        assert res.converged, res
+        assert np.isfinite(res.final_residual), res
+        assert res.final_residual <= 1e-6
+    x0 = jnp.linalg.solve(a, b)
+    res = solvers.cg(a, b, x0=x0, tol=1e-5, maxiter=50)
+    assert res.iterations == 0 and res.converged
+    assert res.final_residual <= 1e-5
+    # analog operator, zero RHS: the corrected MVM of 0 is exactly 0
+    _, A = make_analog(a, device="epiram")
+    res = solvers.cg(A, jnp.zeros((64,)), tol=1e-6, maxiter=50)
+    assert res.iterations == 0 and res.converged, res
+    assert res.ledger.mvms == 1                 # the init MVM is still billed
+
+
+def test_distributed_producer_solve_matches_streamed_1x1():
+    """A producer-driven execution='distributed' CG solve on a 1x1 mesh is
+    draw-identical to the single-device streamed solve (same global block-key
+    schedule), stays one compiled program, and never gathers A."""
+    from repro.launch.mesh import make_mesh
+    a, _, b = spd_system(64)
+    eng_d, _ = make_analog(a, device="epiram")
+    cfg = eng_d.cfg
+    cap_m, cap_n = cfg.geom.capacity
+    a_pad = zero_padding(a, cfg.geom)
+    mb, nb = a_pad.shape[0] // cap_m, a_pad.shape[1] // cap_n
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+    calls = {"n": 0}
+
+    def producer(i, j):
+        calls["n"] += 1
+        return blocks[i, j]
+
+    eng_s = AnalogEngine(cfg, execution="streamed")
+    A_s = eng_s.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    r_s = solvers.cg(A_s, b, tol=1e-4, maxiter=40)
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = AnalogEngine(cfg, execution="distributed", mesh=mesh)
+    A_d = eng.program(producer, KEY, shape=a.shape)
+    traces = calls["n"]
+    r_d = solvers.cg(A_d, b, tol=1e-4, maxiter=40)
+    # probe + program trace + one solve-core trace: one compiled program
+    assert calls["n"] - traces <= 1, calls
+    assert r_d.iterations == r_s.iterations
+    assert float(rel_l2(r_d.x, r_s.x)) < 1e-5, (r_d, r_s)
+    assert r_d.ledger.total_energy_j > 0
+
+
 # ------------------------------------------------------- ledger + kernels
 def test_ledger_splits_write_and_iteration_cost():
     a, _, b = spd_system(64)

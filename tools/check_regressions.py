@@ -35,14 +35,36 @@ def load_baseline(path: str) -> set:
     return out
 
 
+def classname_to_id(cls: str, name: str, repo: str = REPO) -> str:
+    """Map a junit (classname, name) pair back to a pytest node id.
+
+    The junit ``classname`` is the dotted module path PLUS any containing
+    test classes (``tests.test_x.TestFoo`` for
+    ``tests/test_x.py::TestFoo::test_bar``), so blindly replacing dots with
+    slashes manufactures paths like ``tests/test_x/TestFoo.py`` that can
+    never match an allowlist entry.  Resolve instead by finding the longest
+    dotted prefix that is an actual ``.py`` file on disk and treating the
+    remaining segments as ``::``-joined class qualifiers; fall back to the
+    whole-classname-is-the-module mapping when nothing exists (junit from a
+    different tree).
+    """
+    if not cls:
+        return name
+    parts = cls.split(".")
+    for k in range(len(parts), 0, -1):
+        path = "/".join(parts[:k]) + ".py"
+        if os.path.exists(os.path.join(repo, path)):
+            return "::".join([path] + parts[k:] + [name])
+    return "/".join(parts) + f".py::{name}"
+
+
 def failed_ids(junit_path: str) -> set:
     tree = ET.parse(junit_path)
     out = set()
     for case in tree.iter("testcase"):
         if case.find("failure") is not None or case.find("error") is not None:
-            cls = case.get("classname", "").replace(".", "/")
-            name = case.get("name", "")
-            out.add(f"{cls}.py::{name}" if cls else name)
+            out.add(classname_to_id(case.get("classname", ""),
+                                    case.get("name", "")))
     return out
 
 
