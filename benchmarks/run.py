@@ -23,12 +23,14 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (lm_step, solver_convergence, streamed_scaling,
-                   strong_scaling, table1_ec, weak_scaling, writeverify_sweep)
+    from . import (lm_step, pdhg_convergence, solver_convergence,
+                   streamed_scaling, strong_scaling, table1_ec, weak_scaling,
+                   writeverify_sweep)
     modules = [
         ("table1_ec", table1_ec),
         ("writeverify_sweep", writeverify_sweep),
         ("solver_convergence", solver_convergence),
+        ("pdhg_convergence", pdhg_convergence),
         ("weak_scaling", weak_scaling),
         ("strong_scaling", strong_scaling),
         ("streamed_scaling", streamed_scaling),

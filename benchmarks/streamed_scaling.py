@@ -34,7 +34,7 @@ from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
 from repro.core.matrices import ImplicitBandedMatrix
 from repro.engine import AnalogEngine
 
-from .common import time_call
+from .common import run_metadata, time_call
 
 CAP = 32                                   # capacity block edge (1x1 tile MCA)
 GEOM = MCAGeometry(tile_rows=1, tile_cols=1, cell_rows=CAP, cell_cols=CAP)
@@ -127,7 +127,7 @@ def _write_json(rows: List[Dict], quick: bool) -> str:
     payload = {
         "bench": "streamed_scaling",
         "mode": "smoke" if quick else "full",
-        "backend": jax.default_backend(),
+        "metadata": run_metadata(),
         "geom": {"cap": CAP, "tiles": [1, 1]},
         "rows": rows,
     }

@@ -149,7 +149,63 @@ def run_distributed(quick: bool = True) -> List[Dict]:
             "E_write_J": led.write_energy_j,
             "E_iters_J": led.iteration_energy_j,
         })
+    rows += run_pdhg_virtual(quick=quick)
     return rows
+
+
+def run_pdhg_virtual(quick: bool = True) -> List[Dict]:
+    """The companion-paper workload at paper scale: a feasible LP whose
+    >= 65,536^2 constraint matrix (full mode; 4096^2 quick) exists only as a
+    traceable producer, solved by PDHG over the mesh with ``resident=False``
+    -- so BOTH the forward and the transposed corrected MVM re-encode blocks
+    inside their scans and no A-sized array is ever allocated (statically
+    asserted on each direction's exact jitted MVM).  PDHG is O(1/k): the
+    full-scale row runs a fixed handful of iterations and reports the KKT
+    drop from the entry residual rather than converging to tolerance."""
+    mesh = best_mesh()
+    n, cap, maxiter = (4096, 256, 40) if quick else (65536, 2048, 6)
+    geom = MCAGeometry(tile_rows=1, tile_cols=1, cell_rows=cap, cell_cols=cap)
+    cfg = CrossbarConfig(device=get_device("epiram"), geom=geom,
+                         k_iters=5, ec=True)
+    eng = AnalogEngine(cfg, execution="distributed", mesh=mesh)
+    imp = ImplicitBandedMatrix(n=n, cap_m=cap, cap_n=cap, seed=n + 1)
+    key = jax.random.fold_in(jax.random.PRNGKey(6), n)
+    A = eng.program(imp.block, key, shape=(n, n), resident=False)
+    max_fwd = max_aval_elements(
+        lambda x, k: eng.mvm(A, x, key=k),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct(key.shape, key.dtype))
+    max_t = max_aval_elements(
+        lambda y, k: eng.rmvm(A, y, key=k),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct(key.shape, key.dtype))
+    assert max(max_fwd, max_t) < n * n, (max_fwd, max_t, n * n)
+    # Feasible-by-construction LP from O(n) vectors: complementary (x*, s)
+    # split of a deterministic pattern, b/c via the producer's exact matvec.
+    idx = jnp.arange(n, dtype=jnp.float32)
+    u = jnp.sin(0.37 * idx)
+    x_star = jnp.maximum(u, 0.0)
+    s = jnp.maximum(-u, 0.0)
+    y_star = jnp.cos(0.23 * idx) / 8.0
+    b = imp.matvec(x_star)
+    c = imp.rmatvec(y_star) + s
+    # power_iters=4 keeps the full-scale setup at 8 MVMs; the banded
+    # surrogate's norm estimate converges in a few steps.
+    res = solvers.pdhg(A, b, c, tol=1e-3, maxiter=maxiter, key=key,
+                       power_iters=4)
+    led = res.ledger
+    return [{
+        "name": f"strong/pdhg_virtual/n{n}",
+        "devices": mesh.devices.size,
+        "iters": res.iterations,
+        "converged": bool(res.converged),
+        "kkt0": res.initial_residual,
+        "kkt": res.final_residual,
+        "max_elems": max(max_fwd, max_t),
+        "A_elems": n * n,
+        "E_write_J": led.write_energy_j,
+        "E_iters_J": led.iteration_energy_j,
+    }]
 
 
 if __name__ == "__main__":

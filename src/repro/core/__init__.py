@@ -34,12 +34,15 @@ from .crossbar import (
     matrix_write_cost,
     local_block_keys,
     local_dense_mvm,
+    local_dense_rmvm,
     local_program_dense,
     produce_blocks,
     producer_is_traceable,
     program_blocks,
     programmed_block_mvm,
+    programmed_block_rmvm,
     streamed_block_mvm,
+    streamed_block_rmvm,
     streamed_corrected_mvm,
     streamed_program_blocks,
     write_cost,
@@ -48,8 +51,10 @@ from .distributed import (
     distributed_corrected_mvm,
     make_distributed_program,
     make_distributed_programmed_mvm,
+    make_distributed_rmvm,
     make_distributed_streamed_mvm,
     make_distributed_streamed_program,
+    make_distributed_streamed_rmvm,
     mesh_grid_shape,
     pallas_shard_map_supported,
     shard_matrix,

@@ -44,12 +44,15 @@ __all__ = [
     "local_block_keys",
     "program_blocks",
     "programmed_block_mvm",
+    "programmed_block_rmvm",
     "local_program_dense",
     "local_dense_mvm",
+    "local_dense_rmvm",
     "produce_blocks",
     "producer_is_traceable",
     "streamed_program_blocks",
     "streamed_block_mvm",
+    "streamed_block_rmvm",
     "corrected_mvm",
     "streamed_corrected_mvm",
 ]
@@ -122,6 +125,7 @@ def write_cost(
     *,
     include_matrix: bool = True,
     include_inputs: bool = True,
+    transpose: bool = False,
 ) -> WriteStats:
     """Analytic write energy/latency for one corrected MVM of an (m, n) problem.
 
@@ -130,6 +134,13 @@ def write_cost(
     vector write plus the EC X^T replica, scaling with ``batch``).  The
     ``include_*`` switches select the parts; :func:`matrix_write_cost` and
     :func:`input_write_cost` are the named halves.
+
+    ``transpose=True`` bills the input part of a *transposed* execution
+    (``A.T @ y``, DESIGN.md section 5): the DAC vector then has ``m`` entries
+    (padded to the capacity row footprint) and the EC replica is the
+    row-dimension ``Y^T`` array (r x r per MCA assignment instead of c x c).
+    The matrix part is unchanged -- the transposed execution reuses the one
+    programmed image, paying zero extra matrix writes.
     """
     dev, geom = cfg.device, cfg.geom
     cap_m, cap_n = geom.capacity
@@ -151,8 +162,11 @@ def write_cost(
         energy += cells_a * dev.e_write
         latency += rows_a_per_mca * dev.t_write
 
-    c_ = geom.cell_cols
-    n_pad = nb * cap_n
+    # Input-side footprint: forward executions write the (padded) n-length x
+    # vector and the c x c EC X^T replica; transposed executions write the
+    # m-length y vector and the r x r EC Y^T replica against the same image.
+    c_ = geom.cell_rows if transpose else geom.cell_cols
+    n_pad = mb * cap_m if transpose else nb * cap_n
     if include_inputs:
         if cfg.encode_inputs:
             energy += float(n_pad) * batch * dev.e_write        # x vector write
@@ -177,9 +191,13 @@ def matrix_write_cost(m: int, n: int, cfg: CrossbarConfig) -> WriteStats:
 
 
 def input_write_cost(m: int, n: int, cfg: CrossbarConfig,
-                     batch: int = 1) -> WriteStats:
-    """Per-execution cost: x-vector DAC write + EC X^T replica, per column."""
-    return write_cost(m, n, cfg, batch=batch, include_matrix=False)
+                     batch: int = 1, *, transpose: bool = False) -> WriteStats:
+    """Per-execution cost: x-vector DAC write + EC X^T replica, per column.
+
+    ``transpose=True`` bills a transposed execution (m-length y vector + the
+    row-dimension EC replica; see :func:`write_cost`)."""
+    return write_cost(m, n, cfg, batch=batch, include_matrix=False,
+                      transpose=transpose)
 
 
 # --------------------------------------------------------------------------- #
@@ -316,6 +334,67 @@ def programmed_block_mvm(
     return p
 
 
+def programmed_block_rmvm(
+    at_blocks: jnp.ndarray,
+    da_blocks: jnp.ndarray,
+    yb: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    tier2: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Transposed execute stage: corrected ``A.T @ y`` against the programmed
+    image -- zero re-encode of the conductance image.
+
+    The exact mirror of :func:`programmed_block_mvm` run backwards through the
+    crossbar: ``yb`` is (m, batch), the input vector is the ROW-dimension
+    chunking of y (each row-block chunk passes through the DAC, consuming the
+    SAME k_x key half of block (i, j) as a forward execution would), the
+    tier-1 product is assembled from the stored operands as
+    ``p = A_tilde^T y + dA^T y_tilde``, ROW-block partials are summed (rows
+    are the contraction axis of A^T) and tier-2 denoising runs over the
+    assembled (n, batch) column output.  ``use_kernel=True`` dispatches the
+    per-block product to the fused Pallas
+    :func:`repro.kernels.ops.rram_ec_tile_rmvm` tile step.  Returns (n, batch).
+    """
+    mb, nb, cap_m, cap_n = at_blocks.shape
+    batch = yb.shape[1]
+    y_pad = jnp.pad(yb, ((0, mb * cap_m - m), (0, 0)))
+    y_chunks = y_pad.reshape(mb, cap_m, batch)
+    keys = block_keys(key, mb, nb)
+
+    if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
+        raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
+
+    def per_col(at_col, da_col, col_keys):
+        def per_row(at_blk, da_blk, y_blk, k):
+            _, k_x = jax.random.split(k)
+            y_t = _encode_vec(y_blk, k_x, cfg) if cfg.encode_inputs else y_blk
+            if not cfg.ec:
+                return at_blk.T @ y_t
+            if use_kernel:
+                from repro.kernels import ops as kops
+                return kops.rram_ec_tile_rmvm(y_blk, y_t, at_blk, da_blk)
+            if cfg.ec_mode == "faithful":
+                # The paper's three analog products, transposed.
+                return (at_blk.T @ y_blk + (at_blk + da_blk).T @ y_t
+                        - at_blk.T @ y_t)
+            return at_blk.T @ y_blk + da_blk.T @ y_t         # fused, 2 matmuls
+        partials = jax.vmap(per_row)(at_col, da_col, y_chunks, col_keys)
+        return jnp.sum(partials, axis=0)                     # sum over row blocks
+
+    z_blocks = jax.vmap(per_col)(at_blocks.swapaxes(0, 1),
+                                 da_blocks.swapaxes(0, 1),
+                                 keys.swapaxes(0, 1))        # (nb, cap_n, batch)
+    p = z_blocks.reshape(nb * cap_n, batch)[:n]
+    if cfg.ec and tier2:
+        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+    return p
+
+
 def local_program_dense(a: jnp.ndarray, key: jax.Array, cfg: CrossbarConfig
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One device's program stage over a resident dense operand.
@@ -352,6 +431,30 @@ def local_dense_mvm(
     return programmed_block_mvm(
         block_partition(at, cfg.geom), block_partition(da, cfg.geom),
         xb, key, cfg, m=m, n=n, tier2=tier2, use_kernel=use_kernel)
+
+
+def local_dense_rmvm(
+    at: jnp.ndarray,
+    da: jnp.ndarray,
+    yb: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    tier2: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """One device's transposed execute stage over resident dense operands.
+
+    Partitions to capacity blocks and runs the shared
+    :func:`programmed_block_rmvm` pipeline -- the same implementation the
+    local execution mode uses, so the distributed transposed path has no
+    private copy of the tier-1 dataflow.  ``tier2=False`` defers denoising
+    until after the cross-device psum over the ROW axes."""
+    from .virtualization import block_partition
+    m, n = at.shape
+    return programmed_block_rmvm(
+        block_partition(at, cfg.geom), block_partition(da, cfg.geom),
+        yb, key, cfg, m=m, n=n, tier2=tier2, use_kernel=use_kernel)
 
 
 # --------------------------------------------------------------------------- #
@@ -546,6 +649,101 @@ def streamed_block_mvm(
         (at_blocks, keys, i0 + jnp.arange(mb))
     _, rows = jax.lax.scan(row_step, None, row_xs)
     p = rows.reshape(mb * cap_m, batch)[:m]
+    if cfg.ec and tier2:
+        p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
+                                 method=cfg.denoise_method)
+    return p
+
+
+def streamed_block_rmvm(
+    block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+    at_blocks: Optional[jnp.ndarray],
+    yb: jnp.ndarray,
+    key: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    use_kernel: bool = False,
+    tier2: bool = True,
+    block_offset=(0, 0),
+    grid: Optional[Tuple[int, int]] = None,
+) -> jnp.ndarray:
+    """Scan-fused TRANSPOSED execute stage over a streamed block producer.
+
+    The mirror of :func:`streamed_block_mvm` for ``A.T @ y``: one ``lax.scan``
+    over COLUMN blocks (inner scan over row blocks -- the contraction axis of
+    A^T -- with in-place fp32 accumulation) fuses the input-DAC encode of the
+    row-chunked y, the per-block ``dA`` re-derivation, the transposed tier-1
+    EC product (``use_kernel=True`` fuses the Pallas
+    :func:`repro.kernels.ops.rram_ec_tile_rmvm` tile step) and the partial
+    reduction into one traced program -- ONE device dispatch per transposed
+    MVM.  Key/draw schedule matches :func:`programmed_block_rmvm` exactly
+    (block (i, j) consumes the same k_x half it would in a forward
+    execution).  ``yb`` is (m, batch); returns (n, batch).
+
+    ``at_blocks=None`` selects the one-shot variant (each block re-encoded
+    inside the scan with the k_a half -- draws identical to
+    program-then-execute, O(one block) memory); ``grid``/``block_offset``
+    select a local window of a global block grid exactly as in
+    :func:`streamed_block_mvm` (``m``/``n``/``yb`` are then the LOCAL
+    footprint; row-partial psums and tier-2 stay with the caller).
+    """
+    i0, j0 = block_offset
+    oneshot = at_blocks is None
+    if oneshot:
+        cap_m, cap_n = cfg.geom.capacity
+        mb, nb = -(-m // cap_m), -(-n // cap_n)
+    else:
+        mb, nb, cap_m, cap_n = at_blocks.shape
+    batch = yb.shape[1]
+    if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
+        raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
+    y_pad = jnp.pad(yb, ((0, mb * cap_m - m), (0, 0)))
+    y_chunks = y_pad.reshape(mb, cap_m, batch)
+    # Column-major sweep over the SAME (mb, nb) key schedule: block (i, j)
+    # keeps its global key whichever direction the grid is traversed.
+    keys_t = jnp.swapaxes(local_block_keys(key, mb, nb, i0, j0, grid), 0, 1)
+    at_t = None if oneshot else jnp.swapaxes(at_blocks, 0, 1)
+
+    def col_step(_, col_xs):
+        if oneshot:
+            col_keys, j = col_xs
+        else:
+            at_col, col_keys, j = col_xs
+
+        def row_step(acc, row_xs):
+            if oneshot:
+                k, i, y_blk = row_xs
+                a_blk = block_fn(i, j)
+                k_a, k_x = jax.random.split(k)
+                at_blk = encode_tiled(a_blk, k_a, cfg)
+            else:
+                at_blk, k, i, y_blk = row_xs
+                _k_a, k_x = jax.random.split(k)
+                a_blk = block_fn(i, j) if cfg.ec else None
+            y_t = _encode_vec(y_blk, k_x, cfg) if cfg.encode_inputs else y_blk
+            if not cfg.ec:
+                return acc + at_blk.T @ y_t, None
+            if use_kernel:
+                from repro.kernels import ops as kops
+                return acc + kops.rram_ec_tile_rmvm(
+                    y_blk, y_t, at_blk, a_blk - at_blk), None
+            if cfg.ec_mode == "faithful":
+                return acc + (at_blk.T @ y_blk + a_blk.T @ y_t
+                              - at_blk.T @ y_t), None
+            return acc + (at_blk.T @ y_blk + (a_blk - at_blk).T @ y_t), None
+
+        acc0 = jnp.zeros((cap_n, batch), jnp.float32)
+        row_xs = (col_keys, i0 + jnp.arange(mb), y_chunks) if oneshot else \
+            (at_col, col_keys, i0 + jnp.arange(mb), y_chunks)
+        acc, _ = jax.lax.scan(row_step, acc0, row_xs)
+        return None, acc
+
+    col_xs = (keys_t, j0 + jnp.arange(nb)) if oneshot else \
+        (at_t, keys_t, j0 + jnp.arange(nb))
+    _, cols = jax.lax.scan(col_step, None, col_xs)
+    p = cols.reshape(nb * cap_n, batch)[:n]
     if cfg.ec and tier2:
         p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
                                  method=cfg.denoise_method)

@@ -54,8 +54,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .compat import shard_map
 from .crossbar import (CrossbarConfig, input_write_cost, local_dense_mvm,
-                       local_program_dense, matrix_write_cost,
-                       streamed_block_mvm, streamed_program_blocks,
+                       local_dense_rmvm, local_program_dense,
+                       matrix_write_cost, streamed_block_mvm,
+                       streamed_block_rmvm, streamed_program_blocks,
                        write_cost)
 from .error_correction import denoise_least_square
 from .write_verify import WriteStats
@@ -66,8 +67,10 @@ __all__ = [
     "mesh_grid_shape",
     "make_distributed_program",
     "make_distributed_programmed_mvm",
+    "make_distributed_rmvm",
     "make_distributed_streamed_program",
     "make_distributed_streamed_mvm",
+    "make_distributed_streamed_rmvm",
     "pallas_shard_map_supported",
 ]
 
@@ -197,6 +200,58 @@ def make_distributed_programmed_mvm(
     )
 
 
+def make_distributed_rmvm(
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    use_kernel: bool = False,
+):
+    """Build the shard_map'd TRANSPOSED execute stage (unjitted, lowerable).
+
+    Returned fn: (a_tilde, da, y (m, batch), key) -> (z (n, batch)
+    COLUMN-sharded over ``col_axis``, WriteStats).  The mirror of
+    :func:`make_distributed_programmed_mvm` with the contraction flipped:
+    ``y`` enters sharded over the ROW axes (the contraction axis of A^T),
+    tier-1 runs transposed against the same resident operands via the shared
+    per-device stage (:func:`~repro.core.crossbar.local_dense_rmvm`;
+    ``use_kernel=True`` dispatches its tile products to the fused Pallas
+    transposed tile step), partials psum over ``row_axes``, and tier-2
+    denoises on-node on each device's COLUMN segment -- so the output is
+    produced already column-sharded, ready to feed the primal update of a
+    distributed PDHG iteration without a gather.
+    """
+    axes = tuple(row_axes) + (col_axis,)
+
+    def local_fn(at_blk, da_blk, y_blk, key):
+        k = _device_key(key, axes)
+        m_loc, n_loc = at_blk.shape
+        batch = y_blk.shape[1]
+        p = local_dense_rmvm(at_blk, da_blk, y_blk, k, cfg,
+                             tier2=False, use_kernel=use_kernel)
+        p = jax.lax.psum(p, axis_name=tuple(row_axes))
+        if cfg.ec:
+            p = denoise_least_square(
+                p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+        stats = input_write_cost(m_loc, n_loc, cfg, batch=batch,
+                                 transpose=True)
+        return p, _mean_stats(stats, axes)
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    kwargs = {}
+    if use_kernel:
+        kwargs["check_vma"] = False
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(row_spec, col_axis), P(row_spec, col_axis),
+                  P(row_spec, None), P()),
+        out_specs=(P(col_axis, None), P()),
+        **kwargs,
+    )
+
+
 # --------------------------------------------------------------------------- #
 # Producer-driven placement (the matrix never materializes anywhere)
 # --------------------------------------------------------------------------- #
@@ -307,6 +362,73 @@ def make_distributed_streamed_mvm(
         mesh=mesh,
         in_specs=at_spec + (P(col_axis, None), P()),
         out_specs=P(row_spec, None),
+        check_vma=False,   # axis_index-derived block windows defeat the
+                           # static replication checker; psum is still exact
+    )
+
+
+def make_distributed_streamed_rmvm(
+    block_fn: Callable[[jax.Array, jax.Array], jnp.ndarray],
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    m: int,
+    n: int,
+    mb: int,
+    nb: int,
+    resident: bool = True,
+    use_kernel: bool = False,
+):
+    """Build the shard_map'd producer-driven TRANSPOSED execute stage.
+
+    Returned fn: ``(at_blocks, y, key) -> z`` when ``resident``, else
+    ``(y, key) -> z`` -- ``y`` the global (m, batch) panel sharded over the
+    ROW axes (the contraction of A^T), ``z`` the global (n, batch) output
+    which comes back COLUMN-sharded over ``col_axis`` (no gather).
+
+    Each device runs ONE scan-fused
+    :func:`~repro.core.crossbar.streamed_block_rmvm` over its window of the
+    global block grid (global producer indices, global key schedule -- the
+    SAME per-block k_x halves as forward execution, so a 1x1 mesh is
+    draw-identical to the single-device streamed transposed sweep).
+    Transposed tier-1 partials psum over ``row_axes``; tier-2 denoise runs
+    on-node on the local column segment.  ``resident=False`` re-encodes each
+    block inside the scan (draws identical to program-then-execute), so a
+    >= 65,536^2 LP's ``A.T @ y`` runs with no device ever holding more than
+    O(one capacity block) of A.
+    """
+    r_count, c_count = mesh_grid_shape(mesh, row_axes, col_axis)
+    mb_loc, nb_loc = mb // r_count, nb // c_count
+    cap_m, cap_n = cfg.geom.capacity
+    m_loc = m if r_count == 1 else mb_loc * cap_m
+    n_loc = n if c_count == 1 else nb_loc * cap_n
+
+    def local_fn(*args):
+        if resident:
+            at_loc, y_blk, key = args
+        else:
+            (y_blk, key), at_loc = args, None
+        i0 = _row_index(row_axes) * mb_loc
+        j0 = jax.lax.axis_index(col_axis) * nb_loc
+        p = streamed_block_rmvm(
+            block_fn, at_loc, y_blk, key, cfg, m=m_loc, n=n_loc,
+            use_kernel=use_kernel, tier2=False,
+            block_offset=(i0, j0), grid=(mb, nb))
+        p = jax.lax.psum(p, axis_name=tuple(row_axes))
+        if cfg.ec:
+            p = denoise_least_square(
+                p, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method)
+        return p
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    at_spec = (P(row_spec, col_axis, None, None),) if resident else ()
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=at_spec + (P(row_spec, None), P()),
+        out_specs=P(col_axis, None),
         check_vma=False,   # axis_index-derived block windows defeat the
                            # static replication checker; psum is still exact
     )

@@ -119,3 +119,17 @@ class ImplicitBandedMatrix:
                 acc = acc + self.block(i, j) @ xc[j]
             out.append(acc)
         return jnp.concatenate(out)[: self.n]
+
+    def rmatvec(self, y: jnp.ndarray) -> jnp.ndarray:
+        """Exact blockwise ground-truth A.T @ y (the transposed-MVM oracle)."""
+        nb_m = -(-self.n // self.cap_m)
+        nb_n = -(-self.n // self.cap_n)
+        y_pad = jnp.pad(y, (0, nb_m * self.cap_m - self.n))
+        yc = y_pad.reshape(nb_m, self.cap_m)
+        out = []
+        for j in range(nb_n):
+            acc = jnp.zeros((self.cap_n,), jnp.float32)
+            for i in range(nb_m):
+                acc = acc + self.block(i, j).T @ yc[i]
+            out.append(acc)
+        return jnp.concatenate(out)[: self.n]

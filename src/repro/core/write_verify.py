@@ -3,7 +3,9 @@
 Faithful closed-loop programming: re-program the array while the relative
 deviation ``delta(A, A_tilde) > eps`` and fewer than ``N`` iterations have run.
 Each iteration refines the residual programming noise by the device's effective
-verify gain (see :mod:`repro.core.devices`), accruing write energy and latency.
+verify gain (see :mod:`repro.core.devices` and DESIGN.md section 7 for the
+calibration table, the sigma_k model and the validation targets), accruing
+write energy and latency.
 
 Implemented with ``jax.lax.while_loop`` so it jits, vmaps, and shards.  The loop
 carries (k, A_tilde, key, stats); delta uses the p-norm requested (2 or inf) as in

@@ -44,6 +44,19 @@ Placement x pipeline matrix (which combinations fuse, which fall back)::
     distributed   opaque      rejected (cannot trace inside shard_map; use
                   block_fn    execution="streamed" for the host-loop fallback)
 
+Every cell of the matrix also executes TRANSPOSED: ``A.T @ y`` (=
+:meth:`AnalogEngine.rmvm`, via the zero-copy :class:`TransposedAnalogMatrix`
+view) runs the corrected ``A^T y`` against the SAME programmed image --
+tier-1 ``A_tilde^T y + dA^T y_tilde`` from the stored operands, row blocks
+as the contraction (psum over the mesh ROW axes under distributed execution,
+output COLUMN-sharded), tier-2 denoise over the column output, the same
+per-block k_x key halves as a forward call (a 1x1 mesh stays draw-identical
+to streamed in both directions), and ``resident=False`` handles re-encode
+inside the transposed scan exactly as they do forward (no A-sized array in
+either direction).  The pallas tile step reads the same fused kernel in the
+``y^T A`` direction (:func:`repro.kernels.ops.rram_ec_tile_rmvm`); see
+DESIGN.md section 5.
+
 ``backend="pallas"`` under ``execution="distributed"`` is gated by
 :func:`repro.core.distributed.pallas_shard_map_supported`, a compile-only
 probe run once per (backend, mesh shape): where the kernel cannot lower
@@ -122,6 +135,8 @@ linear SOlver).  Every method touches the programmed image only through
     solvers.richardson(A, b)                    # auto-omega stationary solve
     solvers.gmres(A, b); solvers.bicgstab(A, b) # general matrices
     solvers.refine(A, b)                        # analog inner + digital outer
+    solvers.pdhg(A, b, c)                       # LP: min c'x, Ax=b, x>=0
+                                                #   (matvec + rmatvec per iter)
 
 Each returns a :class:`~repro.solvers.SolveResult` whose ledger splits energy
 into this handle's one-time ``write_stats`` and the accumulated per-MVM
@@ -141,7 +156,8 @@ from repro.core.crossbar import CrossbarConfig
 from repro.core.error_correction import denoise_least_square
 from repro.core.write_verify import WriteStats
 
-__all__ = ["AnalogEngine", "AnalogMatrix", "EXECUTION_MODES", "BACKENDS"]
+__all__ = ["AnalogEngine", "AnalogMatrix", "TransposedAnalogMatrix",
+           "EXECUTION_MODES", "BACKENDS"]
 
 EXECUTION_MODES = ("local", "streamed", "distributed")
 BACKENDS = ("reference", "pallas")
@@ -253,9 +269,70 @@ class AnalogMatrix:
     def __matmul__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.engine.mvm(self, x)
 
+    @property
+    def T(self) -> "TransposedAnalogMatrix":
+        """Zero-copy transposed view: ``A.T @ y`` runs the corrected
+        TRANSPOSED MVM ``A^T y`` against the SAME programmed image (no
+        re-encode, no second handle -- the crossbar is read backwards)."""
+        return TransposedAnalogMatrix(self)
+
     def input_write_stats(self, batch: int = 1) -> WriteStats:
         """Per-execution write cost (x DAC pass + EC X^T replica)."""
         return self.engine.input_write_stats(self, batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransposedAnalogMatrix:
+    """Transposed view of an :class:`AnalogMatrix` (``A.T``).
+
+    Holds NO operands of its own: every execution reads the parent's
+    programmed conductance image in the transposed direction through
+    :meth:`AnalogEngine.rmvm` (tier-1 ``A_tilde^T y + dA^T y_tilde``,
+    row-block partials summed, tier-2 denoise over the column output), so the
+    one-time write cost is shared with the forward view and a PDHG-style
+    solver alternating ``A @ x`` / ``A.T @ y`` programs the matrix exactly
+    once.  ``A.T.T is A``.
+    """
+
+    parent: AnalogMatrix
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.parent.shape[1], self.parent.shape[0])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def T(self) -> AnalogMatrix:
+        return self.parent
+
+    @property
+    def engine(self) -> "AnalogEngine":
+        return self.parent.engine
+
+    @property
+    def write_stats(self) -> WriteStats:
+        """The parent's one-time programming cost (shared, never re-paid)."""
+        return self.parent.write_stats
+
+    def __matmul__(self, y: jnp.ndarray) -> jnp.ndarray:
+        return self.parent.engine.rmvm(self.parent, y)
+
+    def dense(self) -> jnp.ndarray:
+        """The exact transposed source matrix A^T, dense unpadded (n, m)."""
+        return self.parent.dense().T
+
+    def input_write_stats(self, batch: int = 1) -> WriteStats:
+        """Per-execution cost of one transposed MVM (y DAC pass + EC Y^T
+        replica over the row dimension)."""
+        return self.parent.engine.input_write_stats(self.parent, batch,
+                                                    transpose=True)
 
 
 _assemble = crossbar.assemble_blocks
@@ -265,6 +342,12 @@ _assemble = crossbar.assemble_blocks
 def _exec_reference(at_blocks, da_blocks, xb, key, *, cfg, m, n):
     return crossbar.programmed_block_mvm(
         at_blocks, da_blocks, xb, key, cfg, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
+def _exec_reference_t(at_blocks, da_blocks, yb, key, *, cfg, m, n):
+    return crossbar.programmed_block_rmvm(
+        at_blocks, da_blocks, yb, key, cfg, m=m, n=n)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
@@ -289,6 +372,39 @@ def _exec_pallas(at, da, xb, key, *, cfg, m, n):
         p = kops.rram_ec_matmul(x_pad.T, x_t.T, at.T, da.T).T[:m]
     else:
         p = (at @ x_t)[:m]
+    if cfg.ec:
+        if cfg.denoise_method == "neumann":
+            p = kops.denoise_stencil(p, lam=cfg.lam, h=cfg.h)
+        elif cfg.denoise_method == "thomas":
+            p = kops.denoise_thomas(p, lam=cfg.lam, h=cfg.h)
+        else:
+            p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
+                                     method=cfg.denoise_method)
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
+def _exec_pallas_t(at, da, yb, key, *, cfg, m, n):
+    """Transposed tier-1 via the same fused Pallas EC kernel read backwards.
+
+    ``at``/``da`` are the dense padded operands shared with the forward path
+    (one cache on the handle serves both directions).  The kernel computes
+    ``z^T = y^T A_tilde + y_tilde^T dA`` in one call; the y DAC pass uses a
+    single whole-vector draw (fold 2 of the call key, keeping it distinct
+    from the forward path's fold 1 when a caller reuses a key across
+    directions) -- statistically identical to the per-block reference draws.
+    """
+    from repro.kernels import ops as kops
+
+    y_pad = jnp.pad(yb, ((0, at.shape[0] - yb.shape[0]), (0, 0)))
+    if cfg.encode_inputs:
+        y_t = crossbar._encode_vec(y_pad, jax.random.fold_in(key, 2), cfg)
+    else:
+        y_t = y_pad
+    if cfg.ec:
+        p = kops.rram_ec_matmul(y_pad.T, y_t.T, at, da).T[:n]
+    else:
+        p = (at.T @ y_t)[:n]
     if cfg.ec:
         if cfg.denoise_method == "neumann":
             p = kops.denoise_stencil(p, lam=cfg.lam, h=cfg.h)
@@ -357,16 +473,18 @@ class AnalogEngine:
         self.mesh = mesh
         self.row_axes = tuple(row_axes)
         self.col_axis = col_axis
-        self._streamed_step = None      # jitted per-block step, built once
+        self._streamed_step = {}        # jitted per-block host-loop steps,
+                                        # keyed (use_kernel, transpose)
         if execution == "distributed":
             from repro.core import distributed as D
             self._dist_program = jax.jit(D.make_distributed_program(
                 cfg, mesh, self.row_axes, col_axis))
             self._dist_mvm = jax.jit(D.make_distributed_programmed_mvm(
                 cfg, mesh, self.row_axes, col_axis))
-            # dense execute pipelines keyed by use_kernel (pallas built
-            # lazily, behind the shard_map capability probe).
-            self._dist_mvm_cache = {False: self._dist_mvm}
+            # dense execute pipelines keyed by (use_kernel, transpose)
+            # (pallas / transposed variants built lazily, the former behind
+            # the shard_map capability probe).
+            self._dist_mvm_cache = {(False, False): self._dist_mvm}
 
     def _dist_use_kernel(self) -> bool:
         """Whether distributed execution may fuse the Pallas tile step."""
@@ -375,16 +493,19 @@ class AnalogEngine:
         from repro.core import distributed as D
         return D.pallas_shard_map_supported(self.mesh)
 
-    def _dense_dist_exec(self):
-        """The jitted shard_map'd dense execute stage for this backend."""
+    def _dense_dist_exec(self, transpose: bool = False):
+        """The jitted shard_map'd dense execute stage for this backend
+        (forward or transposed)."""
         use_kernel = self._dist_use_kernel()
-        fn = self._dist_mvm_cache.get(use_kernel)
+        fn = self._dist_mvm_cache.get((use_kernel, transpose))
         if fn is None:
             from repro.core import distributed as D
-            fn = jax.jit(D.make_distributed_programmed_mvm(
+            make = D.make_distributed_rmvm if transpose else \
+                D.make_distributed_programmed_mvm
+            fn = jax.jit(make(
                 self.cfg, self.mesh, self.row_axes, self.col_axis,
                 use_kernel=use_kernel))
-            self._dist_mvm_cache[use_kernel] = fn
+            self._dist_mvm_cache[(use_kernel, transpose)] = fn
         return fn
 
     # ------------------------------------------------------------- programming
@@ -556,21 +677,60 @@ class AnalogEngine:
         """Like :meth:`mvm` but also returns this call's input-write cost."""
         return self._execute(A, x, key, with_stats=True)
 
-    def input_write_stats(self, A: AnalogMatrix, batch: int = 1) -> WriteStats:
+    def rmvm(self, A: AnalogMatrix, y: jnp.ndarray, *,
+             key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Corrected TRANSPOSED MVM ``A.T @ y`` against the programmed image.
+
+        ``y``: (m,) or (m, batch); returns (n,) / (n, batch).  Reads the SAME
+        conductance image as :meth:`mvm` -- zero re-encode, zero extra
+        programming cost; only the y vector passes through the DAC (per
+        row-block chunk, consuming the identical per-block k_x key halves a
+        forward call would) and tier-2 denoising runs over the column output.
+        Under ``execution="distributed"`` the row shards are the contraction
+        axis: partials psum over the ROW axes and the output comes back
+        COLUMN-sharded (over ``col_axis``).  ``A.T @ y`` is the operator
+        form; :class:`TransposedAnalogMatrix` documents the view.
+        """
+        z, _ = self._execute(A, y, key, transpose=True)
+        return z
+
+    def rmvm_with_stats(self, A: AnalogMatrix, y: jnp.ndarray, *,
+                        key: Optional[jax.Array] = None
+                        ) -> Tuple[jnp.ndarray, WriteStats]:
+        """Like :meth:`rmvm` but also returns this call's input-write cost."""
+        return self._execute(A, y, key, with_stats=True, transpose=True)
+
+    def input_write_stats(self, A: AnalogMatrix, batch: int = 1,
+                          *, transpose: bool = False) -> WriteStats:
         """Per-execution input-write cost, in the same reporting convention as
         the handle's ``write_stats`` (distributed: mean across devices, the
         paper's Figs. 4-5 convention).  Non-divisible mesh shapes bill the
         ceil-divided per-device footprint -- the rows/cols a real placement
-        would pad onto the largest shard -- instead of silently flooring."""
+        would pad onto the largest shard -- instead of silently flooring.
+        ``transpose=True`` bills a transposed execution (the m-length y DAC
+        pass + the row-dimension EC replica)."""
         m, n = A.shape
         if self.execution == "distributed":
             sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
             for ax in self.row_axes:
                 m = -(-m // sizes[ax])
             n = -(-n // sizes[self.col_axis])
-        return crossbar.input_write_cost(m, n, self.cfg, batch=batch)
+        return crossbar.input_write_cost(m, n, self.cfg, batch=batch,
+                                         transpose=transpose)
 
-    def _execute(self, A, x, key, with_stats=False):
+    def _execute(self, A, x, key, with_stats=False, transpose=False):
+        if isinstance(A, TransposedAnalogMatrix):
+            # A transposed view executes as the opposite direction of its
+            # parent: (A.T).T @ x is a forward MVM of the parent.  The same
+            # cross-engine guard as the direct path applies BEFORE
+            # delegating, so a view can't smuggle a handle past it.
+            if A.parent.engine is not self and A.parent.engine.cfg != self.cfg:
+                raise ValueError(
+                    "AnalogMatrix was programmed by an incompatible "
+                    "engine configuration")
+            return A.parent.engine._execute(A.parent, x, key,
+                                            with_stats=with_stats,
+                                            transpose=not transpose)
         if A.engine is not self and A.engine.cfg != self.cfg:
             raise ValueError("AnalogMatrix was programmed by an incompatible "
                              "engine configuration")
@@ -590,10 +750,12 @@ class AnalogEngine:
                 f"executes {self.execution!r}; program it with this engine")
         squeeze = x.ndim == 1
         xb = x[:, None] if squeeze else x
-        if xb.shape[0] != A.n:
+        contraction = A.m if transpose else A.n
+        if xb.shape[0] != contraction:
+            direction = "A.T @ y" if transpose else "A @ x"
             raise ValueError(
-                f"x has {xb.shape[0]} rows but the programmed matrix is "
-                f"{A.m} x {A.n}")
+                f"{direction}: input has {xb.shape[0]} rows but the "
+                f"programmed matrix is {A.m} x {A.n}")
         if key is None:
             # The default key schedule advances Python-side per call; under a
             # jit trace it would freeze at its trace-time value and every
@@ -609,20 +771,22 @@ class AnalogEngine:
         m, n = A.shape
         if self.execution == "distributed":
             if A.at_dense is not None:
-                p, stats = self._dense_dist_exec()(A.at_dense, A.da_dense,
-                                                   xb, key)
+                p, stats = self._dense_dist_exec(transpose)(
+                    A.at_dense, A.da_dense, xb, key)
             else:
                 # Producer-driven: ONE shard_map'd scan dispatch, output
-                # stays row-sharded; per-call cost is analytic (the same
-                # ceil-divided per-device mean as input_write_stats).
-                p = self._exec_dist_streamed(A, xb, key)
-                stats = self.input_write_stats(A, xb.shape[1]) \
+                # stays row-sharded (column-sharded for transposed calls);
+                # per-call cost is analytic (the same ceil-divided per-device
+                # mean as input_write_stats).
+                p = self._exec_dist_streamed(A, xb, key, transpose)
+                stats = self.input_write_stats(A, xb.shape[1],
+                                               transpose=transpose) \
                     if with_stats else None
         else:
             stats = None
             if A.da_blocks is None:
                 # Streamed handle: dA is not resident; re-derive per block.
-                p = self._exec_streamed(A, xb, key)
+                p = self._exec_streamed(A, xb, key, transpose)
             elif self.backend == "pallas":
                 if A._padded is None:
                     mb, nb, cm, cn = A.at_blocks.shape
@@ -638,55 +802,67 @@ class AnalogEngine:
                         A._padded = padded
                 else:
                     padded = A._padded
-                p = _exec_pallas(*padded, xb, key, cfg=self.cfg, m=m, n=n)
+                run = _exec_pallas_t if transpose else _exec_pallas
+                p = run(*padded, xb, key, cfg=self.cfg, m=m, n=n)
             else:
-                p = _exec_reference(A.at_blocks, A.da_blocks, xb, key,
-                                    cfg=self.cfg, m=m, n=n)
+                run = _exec_reference_t if transpose else _exec_reference
+                p = run(A.at_blocks, A.da_blocks, xb, key,
+                        cfg=self.cfg, m=m, n=n)
         if with_stats and stats is None:
-            stats = crossbar.input_write_cost(m, n, self.cfg, batch=xb.shape[1])
+            stats = crossbar.input_write_cost(m, n, self.cfg,
+                                              batch=xb.shape[1],
+                                              transpose=transpose)
         return (p[:, 0] if squeeze else p), stats
 
-    def _exec_streamed(self, A, xb, key):
+    def _exec_streamed(self, A, xb, key, transpose=False):
         """Streamed execute: dA = block_fn - A_tilde is re-derived per
         capacity block (O(block) extra memory), so the streamed path never
         holds the source matrix twice.  Traceable producers run the
-        scan-fused single-dispatch pipeline; opaque ones take the
-        compatibility host loop (one jitted dispatch per block)."""
+        scan-fused single-dispatch pipeline (forward or transposed); opaque
+        ones take the compatibility host loop (one jitted dispatch per
+        block)."""
         cfg = self.cfg
         if cfg.ec and cfg.ec_mode not in ("fused", "faithful"):
             raise ValueError(f"unknown first-order EC mode {cfg.ec_mode!r}")
         m, n = A.shape
         use_kernel = self.backend == "pallas" and cfg.ec
         if A.block_traceable:
-            fn = (A._scan_exec or {}).get(use_kernel)
+            cache_key = (use_kernel, transpose)
+            fn = (A._scan_exec or {}).get(cache_key)
             if fn is None:
-                # Jitted once per handle (per backend): warm MVMs are cache
-                # hits with zero host-side producer work, and the trace is
-                # released with the handle rather than pinned process-wide.
+                # Jitted once per handle (per backend and direction): warm
+                # MVMs are cache hits with zero host-side producer work, and
+                # the trace is released with the handle rather than pinned
+                # process-wide.
+                stage = crossbar.streamed_block_rmvm if transpose \
+                    else crossbar.streamed_block_mvm
                 fn = jax.jit(functools.partial(
-                    crossbar.streamed_block_mvm, A.block_fn,
+                    stage, A.block_fn,
                     cfg=cfg, m=m, n=n, use_kernel=use_kernel))
                 if A._scan_exec is None:
                     A._scan_exec = {}
-                A._scan_exec[use_kernel] = fn
+                A._scan_exec[cache_key] = fn
             return fn(A.at_blocks, xb, key)
-        return self._exec_streamed_host(A, xb, key, use_kernel)
+        return self._exec_streamed_host(A, xb, key, use_kernel, transpose)
 
-    def _exec_dist_streamed(self, A, xb, key):
+    def _exec_dist_streamed(self, A, xb, key, transpose=False):
         """Producer-driven distributed execute: each device runs the
         scan-fused streamed pipeline over its window of the global block
-        grid (one dispatch), partials psum over the contraction axis, tier-2
-        denoises on-node, and the output stays row-sharded.  The jitted
-        shard_map pipeline is cached on the handle per backend, so solver
-        loops re-enter a warm trace."""
+        grid (one dispatch), partials psum over the contraction axis (the
+        column axis forward, the ROW axes transposed), tier-2 denoises
+        on-node, and the output stays sharded over the non-contracted axis.
+        The jitted shard_map pipeline is cached on the handle per backend
+        and direction, so solver loops re-enter a warm trace."""
         use_kernel = self._dist_use_kernel()
-        cache_key = ("dist", use_kernel, A.at_blocks is not None)
+        cache_key = ("dist", use_kernel, A.at_blocks is not None, transpose)
         fn = (A._scan_exec or {}).get(cache_key)
         if fn is None:
             from repro.core import distributed as D
             m, n = A.shape
             mb, nb = A._grid()
-            fn = jax.jit(D.make_distributed_streamed_mvm(
+            make = D.make_distributed_streamed_rmvm if transpose else \
+                D.make_distributed_streamed_mvm
+            fn = jax.jit(make(
                 A.block_fn, self.cfg, self.mesh, self.row_axes, self.col_axis,
                 m=m, n=n, mb=mb, nb=nb, resident=A.at_blocks is not None,
                 use_kernel=use_kernel))
@@ -697,44 +873,61 @@ class AnalogEngine:
             return fn(A.at_blocks, xb, key)
         return fn(xb, key)
 
-    def _exec_streamed_host(self, A, xb, key, use_kernel):
+    def _exec_streamed_host(self, A, xb, key, use_kernel, transpose=False):
         """The compat-only Python block loop (the one remaining in the repo):
         O(mb * nb) dispatches per MVM, kept for producers that cannot trace.
-        Same per-block keys, draws and tile math as the scanned pipeline."""
+        Same per-block keys, draws and tile math as the scanned pipelines,
+        in either direction (``transpose`` chunks the input over row blocks
+        and accumulates over them -- the contraction axis of A^T)."""
         cfg = self.cfg
         m, n = A.shape
         mb, nb, cap_m, cap_n = A.at_blocks.shape
         batch = xb.shape[1]
-        x_pad = jnp.pad(xb, ((0, nb * cap_n - n), (0, 0)))
-        x_chunks = x_pad.reshape(nb, cap_n, batch)
+        pad_to = mb * cap_m if transpose else nb * cap_n
+        x_pad = jnp.pad(xb, ((0, pad_to - xb.shape[0]), (0, 0)))
+        x_chunks = x_pad.reshape(mb if transpose else nb, -1, batch)
         keys = crossbar.block_keys(key, mb, nb)
 
-        if self._streamed_step is None:
+        step = self._streamed_step.get((use_kernel, transpose))
+        if step is None:
             def step(at_blk, a_blk, x_blk, k):
                 _, k_x = jax.random.split(k)
                 x_t = crossbar._encode_vec(x_blk, k_x, cfg) \
                     if cfg.encode_inputs else x_blk
+                from repro.kernels import ops as kops
+                if transpose:
+                    if not cfg.ec:
+                        return at_blk.T @ x_t
+                    if use_kernel:
+                        return kops.rram_ec_tile_rmvm(x_blk, x_t, at_blk,
+                                                      a_blk - at_blk)
+                    if cfg.ec_mode == "faithful":
+                        return (at_blk.T @ x_blk + a_blk.T @ x_t
+                                - at_blk.T @ x_t)
+                    return at_blk.T @ x_blk + (a_blk - at_blk).T @ x_t
                 if not cfg.ec:
                     return at_blk @ x_t
                 if use_kernel:
-                    from repro.kernels import ops as kops
                     return kops.rram_ec_tile_mvm(x_blk, x_t, at_blk,
                                                  a_blk - at_blk)
                 if cfg.ec_mode == "faithful":
                     return at_blk @ x_blk + a_blk @ x_t - at_blk @ x_t
                 return at_blk @ x_blk + (a_blk - at_blk) @ x_t
 
-            # Jitted once per engine: execute-many calls reuse the trace.
-            self._streamed_step = jax.jit(step)
-        step = self._streamed_step
+            # Jitted once per engine (per direction/backend): execute-many
+            # calls reuse the trace.
+            step = jax.jit(step)
+            self._streamed_step[(use_kernel, transpose)] = step
+        out_blocks, acc_cap = (nb, cap_n) if transpose else (mb, cap_m)
         rows = []
-        for i in range(mb):
-            acc = jnp.zeros((cap_m, batch), jnp.float32)
-            for j in range(nb):
+        for o in range(out_blocks):
+            acc = jnp.zeros((acc_cap, batch), jnp.float32)
+            for c in range(mb if transpose else nb):
+                i, j = (c, o) if transpose else (o, c)
                 acc = acc + step(A.at_blocks[i, j], A.block_fn(i, j),
-                                 x_chunks[j], keys[i, j])
+                                 x_chunks[c], keys[i, j])
             rows.append(acc)
-        p = jnp.concatenate(rows, axis=0)[:m]
+        p = jnp.concatenate(rows, axis=0)[:n if transpose else m]
         if cfg.ec:
             p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
                                      method=cfg.denoise_method)

@@ -6,6 +6,7 @@ from .ops import (
     on_cpu,
     rram_ec_matmul,
     rram_ec_tile_mvm,
+    rram_ec_tile_rmvm,
     rram_encode_matmul,
     solver_cg_update,
     solver_richardson_update,
@@ -17,6 +18,7 @@ __all__ = [
     "on_cpu",
     "rram_ec_matmul",
     "rram_ec_tile_mvm",
+    "rram_ec_tile_rmvm",
     "rram_encode_matmul",
     "solver_cg_update",
     "solver_richardson_update",

@@ -27,6 +27,7 @@ __all__ = [
     "rram_encode_matmul",
     "rram_ec_matmul",
     "rram_ec_tile_mvm",
+    "rram_ec_tile_rmvm",
     "denoise_thomas",
     "denoise_stencil",
     "solver_richardson_update",
@@ -121,6 +122,28 @@ def rram_ec_tile_mvm(
     ``at_blk``/``da_blk``: (cap_m, cap_n).  Returns fp32 (cap_m, batch).
     """
     return rram_ec_matmul(x_blk.T, x_t.T, at_blk.T, da_blk.T,
+                          interpret=interpret).T
+
+
+def rram_ec_tile_rmvm(
+    y_blk: jnp.ndarray,
+    y_t: jnp.ndarray,
+    at_blk: jnp.ndarray,
+    da_blk: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """TRANSPOSED tier-1 EC step for ONE capacity tile ((m, batch) layout).
+
+    Computes ``at_blk.T @ y_blk + da_blk.T @ y_t`` as a single fused
+    :func:`rram_ec_matmul` call -- the ``z^T = y^T At + y_t^T dA`` form, i.e.
+    the same kernel read in the transposed direction, so the transposed
+    streamed scan body and the host-loop fallback share one kernel-backed
+    tile step with the forward path's operands untouched.
+    ``y_blk``/``y_t``: (cap_m, batch); ``at_blk``/``da_blk``:
+    (cap_m, cap_n).  Returns fp32 (cap_n, batch).
+    """
+    return rram_ec_matmul(y_blk.T, y_t.T, at_blk, da_blk,
                           interpret=interpret).T
 
 

@@ -177,7 +177,7 @@ def encode_matmul_rng(
 ) -> jnp.ndarray:
     """y = x @ encode(w) with in-VMEM noise: W is the only O(k*n) HBM read.
 
-    Validation caveat (DESIGN.md): the CPU TPU-interpreter stubs
+    Validation caveat (DESIGN.md section 7): the CPU TPU-interpreter stubs
     ``prng_random_bits`` to zeros, so only the sigma=0 path (exact per-tile
     quantized matmul) and determinism are checkable off-TPU; the Box-Muller
     noise path exercises real hardware PRNG.  ``interpret`` accepts

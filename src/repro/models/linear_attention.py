@@ -11,7 +11,7 @@ Numerics: the separable intra-chunk form uses exp(+-cumlog decay); per-token
 log-decay is clamped to [LOG_CLAMP, -1e-6] (LOG_CLAMP = -1.5) so the within-
 chunk exponentials stay inside fp32 range for chunk <= 64.  This bounds the
 fastest representable decay to exp(-1.5) ~ 0.22/token -- a documented modeling
-deviation (DESIGN.md) that only binds for very-fast-decay channels.
+deviation (DESIGN.md section 9) that only binds for very-fast-decay channels.
 
 Shapes: q/k (B, T, H, Dk), v (B, T, H, Dv), state (B, H, Dk, Dv).
 RWKV: o_t uses S_{t-1} plus a (u . k_t) v_t bonus;  SSD: o_t uses S_t.

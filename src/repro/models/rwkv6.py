@@ -3,7 +3,7 @@
 Faithful structure: token-shift interpolation, LoRA-produced per-channel decay
 log_w = -exp(w0 + tanh(x_w A_w) B_w) (the defining RWKV-6 feature), WKV
 recurrence with current-token bonus u, per-head group-norm, gated output, and
-squared-ReLU channel-mix.  Simplifications (DESIGN.md): static token-shift
+squared-ReLU channel-mix.  Simplifications (DESIGN.md section 9): static token-shift
 mixing coefficients (RWKV-6's extra data-dependent token-shift LoRA omitted),
 layernorms -> rmsnorm, decay clamped per linear_attention.LOG_CLAMP.
 

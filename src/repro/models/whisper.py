@@ -2,7 +2,8 @@
 per the assignment: ``input_specs()`` provides precomputed frame embeddings
 (B, S, d_model); sinusoidal positions are added on both sides (the learned
 decoder positions of real Whisper are replaced by sinusoidal so the parameter
-shapes are independent of the assigned sequence lengths -- DESIGN.md).
+shapes are independent of the assigned sequence lengths -- DESIGN.md
+section 9).
 
 Encoder: bidirectional attention; decoder: causal self-attn + cross-attn to
 the encoder states + GELU MLP, pre-layernorm throughout.

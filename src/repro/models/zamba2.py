@@ -1,7 +1,7 @@
 """Zamba2 hybrid: Mamba-2 backbone with one *shared* full-attention block
 applied periodically (every ``cfg.attn_every`` mamba blocks), fed the concat of
 the running hidden state and the original embedding through a per-invocation
-input adapter -- the published Zamba2 topology (DESIGN.md notes the
+input adapter -- the published Zamba2 topology (DESIGN.md section 9 notes the
 simplifications: adapters are plain linear, shared block count = 1).
 
 Layout: n_groups = n_layers // attn_every scan groups (stacked mamba params)

@@ -10,9 +10,17 @@ or bare matvec) into ``A x = b`` solutions:
   * :mod:`~repro.solvers.krylov` -- CG (SPD), BiCGSTAB and restarted GMRES(m);
   * :mod:`~repro.solvers.refinement` -- mixed-precision iterative refinement
     (analog inner solve, digital fp32 exact-residual outer loop);
+  * :mod:`~repro.solvers.pdhg` -- primal-dual hybrid gradient for LINEAR
+    PROGRAMS (``min c'x  s.t.  A x = b, x >= 0``): each iteration is one
+    corrected ``A @ x`` plus one corrected transposed ``A.T @ y`` against the
+    same programmed image -- the workload of the companion RRAM-PDHG paper;
   * :mod:`~repro.solvers.base` -- :class:`SolveResult` with per-iteration
     residual history and a :class:`SolveLedger` splitting energy/latency into
-    the one-time programming cost and the per-iteration input-write cost.
+    the one-time programming cost and the per-iteration input-write cost
+    (forward and transposed executions billed separately).
+
+See ``docs/solvers.md`` for the full API reference, the operator protocol
+(including ``rmatvec``), and guidance on which solver to pick.
 
 Every method is matvec-only, supports multi-RHS batching ``(n, batch)``, jits
 end-to-end (``lax.while_loop`` early stopping), and runs unchanged across the
@@ -31,11 +39,12 @@ Quickstart::
 """
 from .base import LinearOperator, SolveLedger, SolveResult, as_operator
 from .krylov import bicgstab, cg, gmres
+from .pdhg import pdhg, random_feasible_lp
 from .refinement import refine
 from .stationary import estimate_omega, jacobi, richardson, spectral_bounds
 
 __all__ = [
     "LinearOperator", "SolveLedger", "SolveResult", "as_operator",
-    "bicgstab", "cg", "gmres", "refine",
+    "bicgstab", "cg", "gmres", "pdhg", "random_feasible_lp", "refine",
     "estimate_omega", "jacobi", "richardson", "spectral_bounds",
 ]

@@ -7,12 +7,15 @@ methods (:mod:`stationary`, :mod:`krylov`, :mod:`refinement`) and whatever
 supplies the matvec:
 
   * :func:`as_operator` adapts an :class:`~repro.engine.AnalogMatrix` (noisy,
-    error-corrected analog MVM + real write-cost accounting), a dense
+    error-corrected analog MVM + real write-cost accounting), a transposed
+    :class:`~repro.engine.TransposedAnalogMatrix` view, a dense
     ``jnp.ndarray`` (exact digital matvec, zero analog cost -- the oracle used
     in tests), or a bare ``matvec(v, key)`` callable into one
-    :class:`LinearOperator` interface.  Every solver is matvec-only, so the
-    same code runs unchanged against ``local``, ``streamed`` and
-    ``distributed`` execution and both engine backends.
+    :class:`LinearOperator` interface.  Every solver is matvec-only -- plus
+    ``rmatvec`` (the corrected TRANSPOSED MVM ``A.T @ u`` against the same
+    programmed image) for the primal-dual methods -- so the same code runs
+    unchanged against ``local``, ``streamed`` and ``distributed`` execution
+    and both engine backends.
   * :class:`SolveResult` is what every solver returns: the solution, the
     per-iteration relative-residual history, convergence info, and a
     :class:`SolveLedger` splitting energy/latency into the one-time
@@ -32,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.write_verify import WriteStats
-from repro.engine import AnalogMatrix
+from repro.engine import AnalogMatrix, TransposedAnalogMatrix
 
 __all__ = [
     "LinearOperator", "SolveLedger", "SolveResult", "as_operator",
@@ -68,6 +71,13 @@ class LinearOperator:
 
     ``matvec(v, key)`` maps (n, batch) -> (m, batch); ``key`` seeds the input
     DAC noise of an analog execution and is ignored by digital operators.
+    ``rmatvec(u, key)`` -- when available -- maps (m, batch) -> (n, batch)
+    through the TRANSPOSED corrected MVM ``A.T @ u`` against the same
+    programmed image (``None`` for operators that cannot transpose, e.g. a
+    bare matvec callable without an explicit ``rmatvec=``); primal-dual
+    methods (:func:`repro.solvers.pdhg`) require it.
+    ``input_stats_t`` bills one transposed MVM's input writes (the m-length
+    DAC pass + the row-dimension EC replica).
     """
 
     matvec: Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
@@ -76,10 +86,30 @@ class LinearOperator:
     input_stats: Callable[[int], WriteStats]     # per-MVM cost, fn of batch
     dense: Optional[Callable[[], jnp.ndarray]]   # digital reconstruction
     analog: bool
+    rmatvec: Optional[Callable[[jnp.ndarray, jax.Array], jnp.ndarray]] = None
+    input_stats_t: Optional[Callable[[int], WriteStats]] = None
 
     @property
     def n(self) -> int:
         return self.shape[1]
+
+    @property
+    def T(self) -> "LinearOperator":
+        """The transposed operator (matvec/rmatvec and shapes swapped).
+
+        Requires ``rmatvec``; shares the parent's write_stats (the programmed
+        image is one physical object, whichever direction it is read)."""
+        if self.rmatvec is None:
+            raise ValueError("operator has no rmatvec; cannot transpose")
+        return LinearOperator(
+            matvec=self.rmatvec, rmatvec=self.matvec,
+            shape=(self.shape[1], self.shape[0]),
+            write_stats=self.write_stats,
+            input_stats=self.input_stats_t or self.input_stats,
+            input_stats_t=self.input_stats,
+            dense=(lambda: self.dense().T) if self.dense is not None else None,
+            analog=self.analog,
+        )
 
 
 def _zero_stats(_batch: int = 1) -> WriteStats:
@@ -90,16 +120,23 @@ def as_operator(
     A: Union[AnalogMatrix, jnp.ndarray, Callable],
     *,
     shape: Optional[Tuple[int, int]] = None,
+    rmatvec: Optional[Callable] = None,
 ) -> LinearOperator:
     """Adapt ``A`` into a :class:`LinearOperator`.
 
     ``A`` may be an :class:`AnalogMatrix` handle (programmed once; each matvec
     is a corrected analog execution whose input-write cost lands in the
-    ledger), a dense array (exact digital matvec, zero ledger), or a callable
-    ``matvec(v, key)`` with ``shape=(m, n)``.
+    ledger -- and ``rmatvec`` is its corrected TRANSPOSED execution against
+    the same image), a :class:`~repro.engine.TransposedAnalogMatrix` view
+    (``A.T``: matvec/rmatvec swapped), a dense array (exact digital matvec +
+    rmatvec, zero ledger), or a callable ``matvec(v, key)`` with
+    ``shape=(m, n)`` (optionally ``rmatvec=`` for methods that need
+    ``A.T @ u``).
     """
     if isinstance(A, LinearOperator):
         return A
+    if isinstance(A, TransposedAnalogMatrix):
+        return as_operator(A.parent).T
     if isinstance(A, AnalogMatrix):
         # Streamed handles with a traceable producer keep the whole solve one
         # compiled program: each matvec inside the solver's jitted core traces
@@ -113,23 +150,28 @@ def as_operator(
         eng = A.engine
         return LinearOperator(
             matvec=lambda v, k: eng.mvm(A, v, key=k),
+            rmatvec=lambda u, k: eng.rmvm(A, u, key=k),
             shape=A.shape,
             write_stats=A.write_stats,
             input_stats=lambda batch: eng.input_write_stats(A, batch),
+            input_stats_t=lambda batch: eng.input_write_stats(
+                A, batch, transpose=True),
             dense=A.dense,
             analog=True,
         )
     if callable(A) and not hasattr(A, "shape"):
         if shape is None:
             raise ValueError("as_operator(matvec, ...) requires shape=(m, n)")
-        return LinearOperator(matvec=A, shape=tuple(shape),
+        return LinearOperator(matvec=A, rmatvec=rmatvec, shape=tuple(shape),
                               write_stats=WriteStats.zero(),
                               input_stats=_zero_stats, dense=None,
                               analog=False)
     a = jnp.asarray(A)
     if a.ndim != 2:
         raise ValueError(f"expected a matrix, got shape {a.shape}")
-    return LinearOperator(matvec=lambda v, _k: a @ v, shape=a.shape,
+    return LinearOperator(matvec=lambda v, _k: a @ v,
+                          rmatvec=lambda u, _k: a.T @ u,
+                          shape=a.shape,
                           write_stats=WriteStats.zero(),
                           input_stats=_zero_stats, dense=lambda: a,
                           analog=False)
@@ -147,6 +189,13 @@ class SolveLedger:
     power-iteration spectral estimate) are billed separately as
     ``mvms_single`` at the ``input_stats_single`` (batch=1) rate, so the
     amortized totals are ``write + mvms*input + mvms_single*input_single``.
+    Primal-dual solves additionally execute TRANSPOSED MVMs against the same
+    image: those are counted in ``mvms_t`` at the ``input_stats_t`` rate
+    (the m-length y DAC pass + the row-dimension EC replica), and their
+    batch-1 setup half (the power-iteration steps on ``A.T A`` alternate one
+    forward with one transposed MVM) in ``mvms_single_t`` at the batch-1
+    transposed rate -- the matrix write is still paid exactly once,
+    whichever directions read it.
     """
 
     write_stats: WriteStats
@@ -154,16 +203,26 @@ class SolveLedger:
     mvms: int
     input_stats_single: Optional[WriteStats] = None
     mvms_single: int = 0
+    input_stats_t: Optional[WriteStats] = None
+    mvms_t: int = 0
+    input_stats_single_t: Optional[WriteStats] = None
+    mvms_single_t: int = 0
 
     @property
     def write_energy_j(self) -> float:
         return float(self.write_stats.energy_j)
 
+    def _rates(self):
+        single = self.input_stats_single or self.input_stats
+        transposed = self.input_stats_t or self.input_stats
+        single_t = self.input_stats_single_t or transposed
+        return ((self.input_stats, self.mvms), (single, self.mvms_single),
+                (transposed, self.mvms_t), (single_t, self.mvms_single_t))
+
     @property
     def iteration_energy_j(self) -> float:
-        single = self.input_stats_single or self.input_stats
-        return (float(self.input_stats.energy_j) * self.mvms
-                + float(single.energy_j) * self.mvms_single)
+        return sum(float(rate.energy_j) * count
+                   for rate, count in self._rates())
 
     @property
     def total_energy_j(self) -> float:
@@ -171,10 +230,8 @@ class SolveLedger:
 
     @property
     def total_latency_s(self) -> float:
-        single = self.input_stats_single or self.input_stats
-        return (float(self.write_stats.latency_s)
-                + float(self.input_stats.latency_s) * self.mvms
-                + float(single.latency_s) * self.mvms_single)
+        return float(self.write_stats.latency_s) + sum(
+            float(rate.latency_s) * count for rate, count in self._rates())
 
 
 @dataclasses.dataclass
@@ -199,6 +256,9 @@ class SolveResult:
     ledger: SolveLedger
     solver: str
     initial_residual: float = float("nan")
+    # Primal-dual solves (pdhg) also return the dual variable y; None for
+    # the purely-primal linear-system solvers.
+    dual: Optional[jnp.ndarray] = None
 
     @property
     def final_residual(self) -> float:
@@ -232,19 +292,24 @@ def pack_result(
     squeeze: bool,
     mvms_single: int = 0,
     rel0=None,
+    mvms_t: int = 0,
+    mvms_single_t: int = 0,
 ) -> SolveResult:
     """Assemble a :class:`SolveResult` from a jitted core's raw outputs.
 
     ``mvms`` are full-batch solve MVMs; ``mvms_single`` are batch-1 setup
-    MVMs (spectral estimates), billed at the batch-1 input-write rate.
-    ``rel0`` is the per-column relative residual at entry (from the core's
-    init MVM), which makes iteration-0 convergence honest: zero RHS or an
-    exact ``x0`` yields ``converged=True`` with ``final_residual == rel0``
-    rather than ``False`` / ``-inf``.
+    MVMs (spectral estimates), billed at the batch-1 input-write rate;
+    ``mvms_t`` / ``mvms_single_t`` are the full-batch / batch-1 TRANSPOSED
+    counterparts, billed at the transposed rates.  ``rel0`` is the per-column relative
+    residual at entry (from the core's init MVM), which makes iteration-0
+    convergence honest: zero RHS or an exact ``x0`` yields
+    ``converged=True`` with ``final_residual == rel0`` rather than
+    ``False`` / ``-inf``.
     """
     batch = x.shape[1]
     iterations = int(iterations)
     initial = float(jnp.max(rel0)) if rel0 is not None else float("nan")
+    stats_t = op.input_stats_t or op.input_stats
     res = SolveResult(
         x=x[:, 0] if squeeze else x,
         residuals=hist[:, 0] if squeeze else hist,
@@ -254,7 +319,11 @@ def pack_result(
                            input_stats=op.input_stats(batch),
                            mvms=int(mvms),
                            input_stats_single=op.input_stats(1),
-                           mvms_single=int(mvms_single)),
+                           mvms_single=int(mvms_single),
+                           input_stats_t=stats_t(batch),
+                           mvms_t=int(mvms_t),
+                           input_stats_single_t=stats_t(1),
+                           mvms_single_t=int(mvms_single_t)),
         solver=solver,
         initial_residual=initial,
     )

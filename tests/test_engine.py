@@ -493,6 +493,189 @@ def test_distributed_producer_validation(problem):
         dist.mvm(A_st, jnp.ones((a.shape[1],)))
 
 
+# ------------------------------------------------------------ transposed MVMs
+def _seed_style_rmvm(a, y, key, cfg):
+    """From-scratch transposed oracle: per-block k_x encode of the row-chunked
+    y, fused transposed tier-1, row-block reduction, tier-2 over columns --
+    independent of the production programmed_block_rmvm implementation."""
+    m, n = a.shape
+    cap_m, cap_n = cfg.geom.capacity
+    from repro.core.virtualization import zero_padding
+    a_pad = zero_padding(a, cfg.geom)
+    mp, np_ = a_pad.shape
+    y_pad = jnp.pad(y[:, None], ((0, mp - m), (0, 0)))
+    mb, nb = mp // cap_m, np_ // cap_n
+    keys = jax.random.split(key, mb * nb).reshape(mb, nb, -1)
+    at_blocks, da_blocks = crossbar.program_blocks(a, key, cfg)
+    out = jnp.zeros((np_, 1), jnp.float32)
+    for j in range(nb):
+        acc = jnp.zeros((cap_n, 1), jnp.float32)
+        for i in range(mb):
+            _, k_x = jax.random.split(keys[i, j])
+            y_blk = y_pad[i * cap_m:(i + 1) * cap_m]
+            y_t = crossbar._encode_vec(y_blk, k_x, cfg)
+            acc = acc + (at_blocks[i, j].T @ y_blk
+                         + da_blocks[i, j].T @ y_t)
+            # da = a - a_tilde reproduces p = A_tilde^T y + dA^T y_tilde
+        out = out.at[j * cap_n:(j + 1) * cap_n].set(acc)
+    p = denoise_least_square(out[:n], lam=cfg.lam, h=cfg.h,
+                             method=cfg.denoise_method)
+    return p[:, 0]
+
+
+def test_rmvm_matches_seed_style_oracle(problem):
+    """engine.rmvm (A.T @ y) <= 1e-5 against the from-scratch transposed
+    reimplementation under the same key/config, and within the analog noise
+    class of the digital a.T @ y."""
+    a, _ = problem
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg)
+    A = engine.program(a, KEY)
+    y = jax.random.normal(jax.random.fold_in(KEY, 5), (a.shape[0],))
+    z = engine.rmvm(A, y, key=KEY)
+    z_oracle = _seed_style_rmvm(a, y, KEY, cfg)
+    assert float(rel_l2(z, z_oracle)) <= 1e-5
+    assert float(rel_l2(z, a.T @ y)) < 5e-2          # corrected-accuracy class
+    # the operator view is the same execution
+    z_op = A.T @ y
+    assert z_op.shape == z.shape == (a.shape[1],)
+
+
+def test_rmvm_parity_across_paths(problem):
+    """A.T @ y parity <= 1e-5 across local/streamed/distributed(1x1) and
+    reference/pallas tile-step paths (identical per-block keys and draws --
+    the transposed mirror of the forward parity tests), including the
+    one-shot (resident=False) scan variant and the opaque host loop."""
+    a, _ = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    y = jax.random.normal(jax.random.fold_in(KEY, 6), (a.shape[0],))
+
+    local = AnalogEngine(cfg)
+    z_ref = local.rmvm(local.program(a, KEY), y, key=KEY)
+
+    streamed = AnalogEngine(cfg, execution="streamed")
+    A_s = streamed.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    z_s = streamed.rmvm(A_s, y, key=KEY)
+    assert float(rel_l2(z_s, z_ref)) <= 1e-5
+
+    pal = AnalogEngine(cfg, execution="streamed", backend="pallas")
+    A_p = pal.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    z_p = pal.rmvm(A_p, y, key=KEY)
+    assert float(rel_l2(z_p, z_ref)) <= 1e-5
+
+    opaque = lambda i, j: blocks[int(i), int(j)]
+    A_o = streamed.program(opaque, KEY, shape=a.shape)
+    assert not A_o.block_traceable
+    z_o = streamed.rmvm(A_o, y, key=KEY)
+    assert float(rel_l2(z_o, z_s)) <= 1e-5
+
+    # 1x1-mesh draw identity: the distributed transposed sweep consumes the
+    # SAME global block-key schedule as the streamed one.
+    dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
+    A_d = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    z_d = dist.rmvm(A_d, y, key=KEY)
+    assert float(rel_l2(z_d, z_s)) <= 1e-5
+    A_v = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape,
+                       resident=False)
+    z_v = dist.rmvm(A_v, y, key=KEY)
+    assert float(rel_l2(z_v, z_d)) <= 1e-5
+    # dense distributed placement through the same transposed stage
+    A_dd = dist.program(a, KEY)
+    z_dd = dist.rmvm(A_dd, y, key=KEY)
+    assert float(rel_l2(z_dd, a.T @ y)) < 5e-2
+
+
+def test_rmvm_pallas_dense_accuracy(problem):
+    """The dense-pallas transposed path (whole-vector DAC draw) reaches the
+    same EC accuracy class as the reference path, like the forward test."""
+    a, _ = problem
+    cfg = make_cfg()
+    y = jax.random.normal(jax.random.fold_in(KEY, 6), (a.shape[0],))
+    pal = AnalogEngine(cfg, backend="pallas")
+    z = pal.rmvm(pal.program(a, KEY), y, key=KEY)
+    ref = AnalogEngine(cfg)
+    z_ref = ref.rmvm(ref.program(a, KEY), y, key=KEY)
+    truth = a.T @ y
+    assert float(rel_l2(z, truth)) < 3.0 * float(rel_l2(z_ref, truth)) + 1e-3
+
+
+def test_transposed_view_ergonomics(problem):
+    a, x = problem
+    m, n = a.shape
+    engine = AnalogEngine(make_cfg())
+    A = engine.program(a, KEY)
+    assert A.T.shape == (n, m) and A.T.T is A
+    assert A.T.m == n and A.T.n == m
+    # the view shares the one-time write cost and reconstructs A^T
+    assert A.T.write_stats is A.write_stats
+    np.testing.assert_allclose(np.asarray(A.T.dense()), np.asarray(a.T),
+                               rtol=1e-5, atol=1e-6)
+    # engine.mvm on a transposed view is the parent's transposed execution
+    y = jax.random.normal(jax.random.fold_in(KEY, 7), (m,))
+    np.testing.assert_array_equal(
+        np.asarray(engine.mvm(A.T, y, key=KEY)),
+        np.asarray(engine.rmvm(A, y, key=KEY)))
+    # ... and (A.T).T @ x is a forward MVM again
+    np.testing.assert_array_equal(
+        np.asarray(engine.rmvm(A.T, x, key=KEY)),
+        np.asarray(engine.mvm(A, x, key=KEY)))
+    # shape validation names the direction
+    with pytest.raises(ValueError, match="A.T @ y"):
+        engine.rmvm(A, x)                       # (n,) input into A.T @ y
+    with pytest.raises(ValueError, match="A @ x"):
+        engine.mvm(A, y)
+    # the view cannot smuggle a handle past the cross-engine guard
+    other = AnalogEngine(make_cfg(k_iters=2))
+    with pytest.raises(ValueError, match="incompatible"):
+        other.mvm(A.T, y)
+
+
+def test_transposed_input_write_stats(problem):
+    """Transposed executions bill the m-length DAC pass + the ROW-dimension
+    EC replica: on a non-square cell the two directions differ and match the
+    analytic transposed write cost."""
+    a, _ = problem
+    cfg = make_cfg(geom=MCAGeometry(tile_rows=2, tile_cols=2,
+                                    cell_rows=32, cell_cols=16))
+    engine = AnalogEngine(cfg)
+    A = engine.program(a, KEY)
+    fwd = A.input_write_stats(batch=2)
+    tra = A.T.input_write_stats(batch=2)
+    want = crossbar.input_write_cost(*a.shape, cfg, batch=2, transpose=True)
+    np.testing.assert_allclose(float(tra.energy_j), float(want.energy_j),
+                               rtol=1e-6)
+    assert float(tra.energy_j) != float(fwd.energy_j)
+    # rmvm_with_stats bills the same per-call transposed cost
+    y = jax.random.normal(jax.random.fold_in(KEY, 8), (a.shape[0],))
+    _, call = engine.rmvm_with_stats(A, y, key=KEY)
+    np.testing.assert_allclose(float(call.energy_j), float(want.energy_j) / 2,
+                               rtol=1e-6)
+
+
+def test_rmvm_streamed_single_dispatch(problem):
+    """The transposed scan pipeline keeps the streamed dispatch discipline:
+    O(1) producer invocations per rmvm trace, zero when warm, and the
+    transposed trace caches independently of the forward one."""
+    a, x = problem
+    cfg = make_cfg()
+    blocks = _block_view(a, cfg)
+    producer, calls = _counting_producer(blocks)
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(producer, KEY, shape=a.shape)
+    y = jax.random.normal(jax.random.fold_in(KEY, 9), (a.shape[0],))
+    before = calls["n"]
+    z1 = engine.rmvm(A, y, key=KEY)
+    assert calls["n"] - before <= 1          # one transposed trace
+    warm = calls["n"]
+    z2 = engine.rmvm(A, y, key=jax.random.fold_in(KEY, 1))
+    assert calls["n"] == warm                # warm rmvm: zero host work
+    assert z1.shape == z2.shape == (a.shape[1],)
+    # forward and transposed pipelines coexist on one handle
+    engine.mvm(A, x, key=KEY)
+    assert calls["n"] - warm <= 1
+
+
 # -------------------------------------------------------------- pallas backend
 def test_pallas_backend_accuracy(problem):
     a, x = problem

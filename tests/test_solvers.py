@@ -240,6 +240,124 @@ def test_distributed_producer_solve_matches_streamed_1x1():
     assert r_d.ledger.total_energy_j > 0
 
 
+# ------------------------------------------------- PDHG linear programming
+def test_pdhg_digital_reaches_known_optimum():
+    """Digital PDHG on a random feasible LP with a constructed optimal pair:
+    objective within 1e-4 of the known optimum, primal feasible, x >= 0."""
+    a, b, c, x_star, y_star = solvers.random_feasible_lp(
+        jax.random.fold_in(KEY, 11), 48, 64)
+    obj_star = float(c @ x_star)
+    assert abs(obj_star - float(b @ y_star)) < 1e-5   # strong duality holds
+    res = solvers.pdhg(a, b, c, tol=1e-6, maxiter=20000)
+    assert res.converged, res
+    assert abs(float(c @ res.x) - obj_star) / (1 + abs(obj_star)) < 1e-4
+    assert float(rel_l2(a @ res.x, b)) < 1e-4          # primal feasibility
+    assert float(res.x.min()) >= 0.0
+    assert res.dual is not None and res.dual.shape == b.shape
+    # dual objective closes the gap too
+    assert abs(-float(b @ res.dual) - obj_star) / (1 + abs(obj_star)) < 1e-4
+
+
+def test_pdhg_analog_matches_digital_oracle():
+    """Acceptance: an analog PDHG solve over a programmed dense local handle
+    -- corrected matvec/rmatvec only -- reaches the digital PDHG oracle's
+    objective within 1e-3, and the ledger bills forward and transposed MVMs
+    separately on top of the one-time write."""
+    a, b, c, _, _ = solvers.random_feasible_lp(
+        jax.random.fold_in(KEY, 12), 48, 64)
+    digital = solvers.pdhg(a, b, c, tol=1e-6, maxiter=20000)
+    _, A = make_analog(a, device="epiram")
+    res = solvers.pdhg(A, b, c, tol=2e-4, maxiter=20000, key=KEY)
+    assert res.converged, res
+    obj_a, obj_d = float(c @ res.x), float(c @ digital.x)
+    assert abs(obj_a - obj_d) / (1 + abs(obj_d)) <= 1e-3, (obj_a, obj_d)
+    led = res.ledger
+    assert led.mvms == res.iterations + 1          # init + one matvec/iter
+    assert led.mvms_t == led.mvms                  # one rmatvec per matvec
+    # 16 power steps = 16 forward + 16 transposed batch-1 setup MVMs,
+    # each half billed at its own direction's input-write rate
+    assert led.mvms_single == 16 and led.mvms_single_t == 16
+    assert led.write_energy_j > 0
+    # transposed executions contribute their own billed energy
+    assert float(led.input_stats_t.energy_j) > 0
+    assert led.total_energy_j == pytest.approx(
+        led.write_energy_j
+        + led.mvms * float(led.input_stats.energy_j)
+        + led.mvms_single * float(led.input_stats_single.energy_j)
+        + led.mvms_t * float(led.input_stats_t.energy_j)
+        + led.mvms_single_t * float(led.input_stats_single_t.energy_j))
+
+
+def test_pdhg_batched_matches_stacked():
+    """Multi-RHS PDHG (one LP per column) equals the stacked single-column
+    solves on a digital operator (per-column scalars, no cross-mixing)."""
+    a, B, C, _, _ = solvers.random_feasible_lp(
+        jax.random.fold_in(KEY, 13), 32, 48, batch=3)
+    rb = solvers.pdhg(a, B, C, tol=1e-5, maxiter=20000)
+    assert rb.x.shape == (48, 3) and rb.dual.shape == (32, 3)
+    for j in range(3):
+        rj = solvers.pdhg(a, B[:, j], C[:, j], tol=1e-5, maxiter=20000)
+        assert float(rel_l2(rb.x[:, j], rj.x)) < 1e-4
+
+
+def test_pdhg_streamed_matches_dense():
+    """Same base key => identical programming and DAC draws => a streamed
+    producer handle runs the identical PDHG solve as the dense handle."""
+    a, b, c, _, _ = solvers.random_feasible_lp(
+        jax.random.fold_in(KEY, 14), 64, 64)
+    eng_d, A = make_analog(a, device="epiram")
+    cfg = eng_d.cfg
+    cap_m, cap_n = cfg.geom.capacity
+    a_pad = zero_padding(a, cfg.geom)
+    mb, nb = a_pad.shape[0] // cap_m, a_pad.shape[1] // cap_n
+    blocks = a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+    eng_s = AnalogEngine(cfg, execution="streamed")
+    A_s = eng_s.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
+    r_d = solvers.pdhg(A, b, c, tol=5e-4, maxiter=5000, key=KEY)
+    r_s = solvers.pdhg(A_s, b, c, tol=5e-4, maxiter=5000, key=KEY)
+    assert r_d.iterations == r_s.iterations
+    assert float(rel_l2(r_s.x, r_d.x)) < 1e-5, (r_s, r_d)
+
+
+def test_pdhg_operator_validation():
+    a, b, c, _, _ = solvers.random_feasible_lp(
+        jax.random.fold_in(KEY, 15), 8, 12)
+    with pytest.raises(ValueError, match="rmatvec"):
+        solvers.pdhg(solvers.as_operator(lambda v, k: v[:8], shape=(8, 12)),
+                     b, c)
+    with pytest.raises(ValueError, match="rows"):
+        solvers.pdhg(a, c, b)                      # swapped panels
+    with pytest.raises(ValueError, match="batch"):
+        solvers.pdhg(a, b[:, None], jnp.stack([c, c], axis=1))
+    # a bare matvec WITH rmatvec= works
+    op = solvers.as_operator(lambda v, k: a @ v, shape=a.shape,
+                             rmatvec=lambda u, k: a.T @ u)
+    res = solvers.pdhg(op, b, c, tol=1e-5, maxiter=20000)
+    assert res.converged
+
+
+def test_operator_transpose_view():
+    """as_operator(A.T) and LinearOperator.T swap matvec/rmatvec and share
+    the parent's programmed image and write cost."""
+    a, _, _ = spd_system(64)
+    a = a[:48]                                     # rectangular (48, 64)
+    _, A = make_analog(jnp.pad(a, ((0, 16), (0, 0))))  # square handle
+    # dense digital: .T is exact
+    op = solvers.as_operator(a)
+    v = jax.random.normal(jax.random.fold_in(KEY, 16), (48,))[:, None]
+    np.testing.assert_allclose(np.asarray(op.T.matvec(v, KEY)),
+                               np.asarray(a.T @ v), rtol=1e-6)
+    assert op.T.shape == (64, 48) and op.T.T.shape == a.shape
+    # analog: as_operator over the engine view executes the parent's rmvm
+    opA = solvers.as_operator(A.T)
+    u = jax.random.normal(jax.random.fold_in(KEY, 17), (64,))[:, None]
+    want = A.engine.rmvm(A, u, key=KEY)
+    np.testing.assert_array_equal(np.asarray(opA.matvec(u, KEY)[:, 0]),
+                                  np.asarray(want[:, 0]))
+    assert float(opA.write_stats.energy_j) == \
+        float(A.write_stats.energy_j)              # shared one-time write
+
+
 # ------------------------------------------------------- ledger + kernels
 def test_ledger_splits_write_and_iteration_cost():
     a, _, b = spd_system(64)
