@@ -1,0 +1,38 @@
+"""Static and post-hoc analysis: jaxpr invariants, HLO cost, rooflines.
+
+``repro.analysis.verify`` is the jaxpr invariant verifier (the one IR
+walker plus the AvalBound / DispatchCount / KeyReuse / PrecisionLint /
+CollectiveAudit passes); ``repro.analysis.pipelines`` registers the
+canonical pipeline matrix those passes are run over by
+``tools/check_invariants.py``.  See DESIGN.md section 10.
+"""
+from repro.analysis.memory import jaxpr_max_elements, max_aval_elements
+from repro.analysis.verify import (
+    CallCounter,
+    Report,
+    Site,
+    Violation,
+    aval_bound,
+    collective_audit,
+    dispatch_count,
+    key_reuse,
+    precision_lint,
+    run_all,
+    trace,
+)
+
+__all__ = [
+    "CallCounter",
+    "Report",
+    "Site",
+    "Violation",
+    "aval_bound",
+    "collective_audit",
+    "dispatch_count",
+    "jaxpr_max_elements",
+    "key_reuse",
+    "max_aval_elements",
+    "precision_lint",
+    "run_all",
+    "trace",
+]

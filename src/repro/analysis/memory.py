@@ -4,67 +4,34 @@ The paper's scalability claim is that a >= 65,536^2 solve never allocates an
 A-sized array -- not on the host, not on any device.  That property is
 *structural*: it is visible in the jaxpr of the jitted computation before
 anything runs.  :func:`max_aval_elements` walks every equation (recursing
-into scan/while/cond/pjit/shard_map sub-jaxprs) and returns the largest
-intermediate, input, constant or output aval in elements, so tests and
-benchmarks can assert ``max_aval_elements(mvm_fn, x, key) << m * n`` without
-paying for (or being able to afford) a real A-sized buffer.
+into scan/while/cond/pjit/shard_map/custom_vjp sub-jaxprs) and returns the
+largest intermediate, input, constant or output aval in elements, so tests
+and benchmarks can assert ``max_aval_elements(mvm_fn, x, key) << m * n``
+without paying for (or being able to afford) a real A-sized buffer.
 
 Note the per-device view: inside a ``shard_map`` sub-jaxpr the avals are the
 per-device block shapes, which is exactly the bound that matters -- a global
 array sharded 8 ways shows up as its (A/8)-sized local aval, while a true
 A-sized materialization shows up full size on the offending equation.
+
+The traversal itself lives in :mod:`repro.analysis.verify` -- the shared
+IR walker behind every invariant pass -- so there is exactly one
+implementation of sub-jaxpr discovery.  (The original walker here missed
+jaxprs reached through dict or nested-container params and the
+``custom_vjp`` forward rule hidden behind ``fwd_jaxpr_thunk``; see
+tests/test_verify.py::TestWalkerRegressions for the known-bad programs.)
+For a reporting variant that also names the offending equation and source
+line, use :func:`repro.analysis.verify.aval_bound`.
 """
 from __future__ import annotations
 
 from typing import Any
 
 import jax
-import numpy as np
 
-try:  # jax >= 0.5 moved the IR types to jax.extend.core
-    from jax.extend.core import ClosedJaxpr as _ClosedJaxpr, Jaxpr as _Jaxpr
-except ImportError:  # pragma: no cover - older jax
-    _Jaxpr = jax.core.Jaxpr
-    _ClosedJaxpr = jax.core.ClosedJaxpr
+from repro.analysis.verify import jaxpr_max_elements
 
 __all__ = ["max_aval_elements", "jaxpr_max_elements"]
-
-
-def _aval_elements(var) -> int:
-    aval = getattr(var, "aval", None)
-    shape = getattr(aval, "shape", None)
-    if shape is None:
-        return 0
-    return int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
-
-
-def _iter_subjaxprs(params: dict):
-    for v in params.values():
-        if isinstance(v, _Jaxpr):
-            yield v
-        elif isinstance(v, _ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, (tuple, list)):
-            for item in v:
-                if isinstance(item, _Jaxpr):
-                    yield item
-                elif isinstance(item, _ClosedJaxpr):
-                    yield item.jaxpr
-
-
-def jaxpr_max_elements(jaxpr) -> int:
-    """Largest aval (elements) anywhere in a (closed) jaxpr, recursively."""
-    if isinstance(jaxpr, _ClosedJaxpr):
-        jaxpr = jaxpr.jaxpr
-    best = 0
-    for var in (*jaxpr.invars, *jaxpr.constvars, *jaxpr.outvars):
-        best = max(best, _aval_elements(var))
-    for eqn in jaxpr.eqns:
-        for var in (*eqn.invars, *eqn.outvars):
-            best = max(best, _aval_elements(var))
-        for sub in _iter_subjaxprs(eqn.params):
-            best = max(best, jaxpr_max_elements(sub))
-    return best
 
 
 def max_aval_elements(fn, *args: Any, **kwargs: Any) -> int:

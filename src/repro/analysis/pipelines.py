@@ -1,0 +1,314 @@
+"""The canonical pipeline matrix the invariant verifier runs over.
+
+Every claim-bearing execution path of the engine -- placement (local /
+streamed / distributed) x pipeline (MVM / solve) x direction (forward /
+rmatvec) x backend (reference / pallas), plus CG and PDHG end-to-end
+solve cores -- is registered here as a :class:`PipelineSpec` whose
+``build()`` produces a traceable closure and ``ShapeDtypeStruct``
+argument specs.  Nothing numeric runs when a pipeline is *verified*:
+the closure is traced with :func:`jax.make_jaxpr` and the five passes
+of :mod:`repro.analysis.verify` inspect the jaxpr (building a spec may
+program a small resident image once).
+
+The distributed ``resident=False`` entries trace the paper-scale regime
+-- a virtual 65,536^2 operator (2048-capacity blocks, a 32 x 32 block
+grid) whose content is an :class:`~repro.core.matrices.ImplicitBandedMatrix`
+producer -- and prove statically that no device ever holds more than a
+few capacity blocks, that a warm MVM is a single dispatch with zero
+producer re-invocations, and that the only collectives are psums over
+the declared mesh axes.
+
+``tools/check_invariants.py`` runs :func:`verify_pipeline` over
+:func:`registered_pipelines` and compares :func:`manifest_record`
+output against the checked-in ``INVARIANTS.json``.  To add a pipeline:
+append a :class:`PipelineSpec` in :func:`registered_pipelines`, then
+re-generate the manifest with ``tools/check_invariants.py --update``.
+See DESIGN.md section 10 and docs/analysis.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import verify as V
+
+#: virtual paper-scale operator: n^2 = 4.29e9 elements, never materialized
+VIRTUAL_N = 65_536
+VIRTUAL_CAP = 2_048
+
+
+@dataclasses.dataclass
+class BuiltPipeline:
+    """A traceable pipeline: closure + arg specs (+ producer counter)."""
+
+    fn: Callable
+    args: Tuple[Any, ...]
+    producer: Optional[V.CallCounter] = None
+    allowed_axes: Tuple[str, ...] = ()
+
+    def trace(self) -> Tuple[Any, Optional[int]]:
+        """(jaxpr, trace-time producer calls); nothing executes."""
+        before = self.producer.calls if self.producer is not None else 0
+        jaxpr = V.trace(self.fn, *self.args)
+        calls = (self.producer.calls - before
+                 if self.producer is not None else None)
+        return jaxpr, calls
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """One registered placement x pipeline x direction x backend config."""
+
+    name: str
+    placement: str            # local | streamed | distributed
+    direction: str            # forward | rmatvec | solve
+    backend: str              # reference | pallas
+    build: Callable[[], BuiltPipeline]
+    min_devices: int = 1
+    aval_budget: int = 0
+    max_top_level: int = 8
+    max_producer_calls: Optional[int] = None
+    per_device_budget: Optional[int] = None
+    allow_baked: bool = False
+
+
+def _key() -> jax.Array:
+    return jax.random.PRNGKey(7)
+
+
+def _key_spec() -> jax.ShapeDtypeStruct:
+    k = _key()
+    return jax.ShapeDtypeStruct(k.shape, k.dtype)
+
+
+def _vec(n: int, batch: Optional[int] = None) -> jax.ShapeDtypeStruct:
+    shape = (n,) if batch is None else (n, batch)
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _small_cfg():
+    from repro.core import CrossbarConfig, MCAGeometry, get_device
+    return CrossbarConfig(device=get_device("taox-hfox"),
+                          geom=MCAGeometry(2, 2, 32, 32), k_iters=5, ec=True)
+
+
+def _virtual_cfg():
+    from repro.core import CrossbarConfig, MCAGeometry, get_device
+    return CrossbarConfig(device=get_device("taox-hfox"),
+                          geom=MCAGeometry(4, 4, 512, 512), k_iters=5,
+                          ec=True)
+
+
+def _mesh(shape: Tuple[int, int]):
+    from repro.launch.mesh import make_mesh
+    return make_mesh(shape, ("data", "model"))
+
+
+def _banded(n: int, cap: int, seed: int = 2):
+    from repro.core.matrices import ImplicitBandedMatrix
+    return ImplicitBandedMatrix(n=n, cap_m=cap, cap_n=cap, seed=seed)
+
+
+def _build_local(backend: str, transpose: bool) -> BuiltPipeline:
+    from repro.engine import AnalogEngine
+    cfg = _small_cfg()
+    engine = AnalogEngine(cfg, backend=backend)
+    key = _key()
+    a = jax.random.normal(key, (100, 90), jnp.float32) / 10
+    A = engine.program(a, key)
+    n_in = a.shape[0] if transpose else a.shape[1]
+    return BuiltPipeline(fn=engine.mvm_fn(A, transpose=transpose),
+                        args=(_vec(n_in), _key_spec()))
+
+
+def _build_streamed(backend: str, transpose: bool) -> BuiltPipeline:
+    from repro.engine import AnalogEngine
+    cfg = _small_cfg()
+    cap = cfg.geom.capacity[0]                       # 64
+    n = 4 * cap                                      # 4 x 4 block grid
+    engine = AnalogEngine(cfg, execution="streamed", backend=backend)
+    producer = V.CallCounter(_banded(n, cap).block)
+    A = engine.program(producer, _key(), shape=(n, n))
+    return BuiltPipeline(fn=engine.mvm_fn(A, transpose=transpose),
+                        args=(_vec(n), _key_spec()), producer=producer)
+
+
+def _build_distributed_dense(backend: str, transpose: bool,
+                             mesh_shape: Tuple[int, int]) -> BuiltPipeline:
+    from repro.engine import AnalogEngine
+    cfg = _small_cfg()
+    cap = cfg.geom.capacity[0]
+    n = 2 * cap * max(mesh_shape)                    # divides every mesh dim
+    engine = AnalogEngine(cfg, execution="distributed", backend=backend,
+                          mesh=_mesh(mesh_shape))
+    key = _key()
+    a = jax.random.normal(key, (n, n), jnp.float32) / float(n)
+    A = engine.program(a, key)
+    return BuiltPipeline(fn=engine.mvm_fn(A, transpose=transpose),
+                        args=(_vec(n), _key_spec()),
+                        allowed_axes=engine.collective_axes)
+
+
+def _build_virtual(backend: str, transpose: bool,
+                   mesh_shape: Tuple[int, int]) -> BuiltPipeline:
+    """Paper-scale distributed resident=False producer pipeline."""
+    from repro.engine import AnalogEngine
+    cfg = _virtual_cfg()
+    engine = AnalogEngine(cfg, execution="distributed", backend=backend,
+                          mesh=_mesh(mesh_shape))
+    producer = V.CallCounter(_banded(VIRTUAL_N, VIRTUAL_CAP).block)
+    A = engine.program(producer, _key(), shape=(VIRTUAL_N, VIRTUAL_N),
+                       resident=False)
+    return BuiltPipeline(fn=engine.mvm_fn(A, transpose=transpose),
+                        args=(_vec(VIRTUAL_N), _key_spec()),
+                        producer=producer,
+                        allowed_axes=engine.collective_axes)
+
+
+def _build_cg() -> BuiltPipeline:
+    from repro.engine import AnalogEngine
+    from repro.solvers import as_operator, cg_pipeline
+    cfg = _small_cfg()
+    cap = cfg.geom.capacity[0]
+    n = 4 * cap
+    engine = AnalogEngine(cfg, execution="streamed")
+    producer = V.CallCounter(_banded(n, cap).block)
+    A = engine.program(producer, _key(), shape=(n, n))
+    core = cg_pipeline(as_operator(A), tol=1e-5, maxiter=50)
+    return BuiltPipeline(fn=core,
+                        args=(_vec(n, 1), _vec(n, 1), _key_spec()),
+                        producer=producer)
+
+
+def _build_pdhg(mesh_shape: Tuple[int, int]) -> BuiltPipeline:
+    """End-to-end PDHG LP core over the virtual 65,536^2 operator."""
+    from repro.engine import AnalogEngine
+    from repro.solvers import as_operator, pdhg_pipeline
+    cfg = _virtual_cfg()
+    engine = AnalogEngine(cfg, execution="distributed",
+                          mesh=_mesh(mesh_shape))
+    producer = V.CallCounter(_banded(VIRTUAL_N, VIRTUAL_CAP).block)
+    A = engine.program(producer, _key(), shape=(VIRTUAL_N, VIRTUAL_N),
+                       resident=False)
+    core = pdhg_pipeline(as_operator(A), tau=0.1, sigma=0.1, tol=1e-4,
+                         maxiter=100)
+    n = VIRTUAL_N
+    return BuiltPipeline(
+        fn=core,
+        args=(_vec(n, 1), _vec(n, 1), _vec(n, 1), _vec(n, 1), _key_spec()),
+        producer=producer, allowed_axes=engine.collective_axes)
+
+
+def _cap2(cfg_fn: Callable) -> int:
+    from repro.core.crossbar import capacity_elements
+    return capacity_elements(cfg_fn())
+
+
+def registered_pipelines() -> List[PipelineSpec]:
+    """The canonical matrix, in a stable order (the manifest order)."""
+    small = _cap2(_small_cfg)          # 64 x 64 capacity blocks
+    virt = _cap2(_virtual_cfg)         # 2048 x 2048 capacity blocks
+    specs: List[PipelineSpec] = []
+
+    for backend in ("reference", "pallas"):
+        for transpose, direction in ((False, "forward"), (True, "rmatvec")):
+            specs.append(PipelineSpec(
+                name=f"local-{direction}-{backend}",
+                placement="local", direction=direction, backend=backend,
+                build=(lambda b=backend, t=transpose: _build_local(b, t)),
+                aval_budget=64 * small))
+            specs.append(PipelineSpec(
+                name=f"streamed-{direction}-{backend}",
+                placement="streamed", direction=direction, backend=backend,
+                build=(lambda b=backend, t=transpose: _build_streamed(b, t)),
+                aval_budget=64 * small, max_producer_calls=3,
+                allow_baked=True))
+
+    for transpose, direction in ((False, "forward"), (True, "rmatvec")):
+        specs.append(PipelineSpec(
+            name=f"distributed-{direction}-reference",
+            placement="distributed", direction=direction,
+            backend="reference",
+            build=(lambda t=transpose: _build_distributed_dense(
+                "reference", t, (1, 1))),
+            aval_budget=64 * small, per_device_budget=64 * small))
+
+    for mesh_shape, min_dev in (((1, 1), 1), ((2, 4), 8)):
+        tag = f"{mesh_shape[0]}x{mesh_shape[1]}"
+        for transpose, direction in ((False, "forward"), (True, "rmatvec")):
+            specs.append(PipelineSpec(
+                name=f"distributed-virtual65536-{direction}-{tag}",
+                placement="distributed", direction=direction,
+                backend="reference",
+                build=(lambda t=transpose, s=mesh_shape: _build_virtual(
+                    "reference", t, s)),
+                min_devices=min_dev,
+                aval_budget=16 * virt,               # << 65,536^2 = 1024*virt
+                max_producer_calls=3,
+                per_device_budget=16 * virt,
+                allow_baked=True))
+
+    specs.append(PipelineSpec(
+        name="solve-cg-streamed-reference",
+        placement="streamed", direction="solve", backend="reference",
+        build=_build_cg, aval_budget=64 * small, max_producer_calls=3,
+        max_top_level=24, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="solve-pdhg-distributed-virtual65536-1x1",
+        placement="distributed", direction="solve", backend="reference",
+        build=(lambda: _build_pdhg((1, 1))),
+        aval_budget=16 * virt, max_producer_calls=8, max_top_level=64,
+        per_device_budget=16 * virt, allow_baked=True))
+    return specs
+
+
+def available_pipelines() -> List[PipelineSpec]:
+    """Registered pipelines runnable on this host's device count."""
+    n_dev = len(jax.devices())
+    return [p for p in registered_pipelines() if p.min_devices <= n_dev]
+
+
+def verify_pipeline(spec: PipelineSpec) -> Dict[str, V.Report]:
+    """Build, trace, and run all five passes over one registered pipeline."""
+    built = spec.build()
+    jaxpr, producer_calls = built.trace()
+    return V.run_all(
+        jaxpr,
+        aval_budget=spec.aval_budget or None,
+        max_top_level=spec.max_top_level,
+        producer_calls=producer_calls,
+        max_producer_calls=spec.max_producer_calls,
+        allowed_axes=built.allowed_axes or None,
+        per_device_budget=spec.per_device_budget,
+        allow_baked=spec.allow_baked)
+
+
+def manifest_record(spec: PipelineSpec,
+                    reports: Dict[str, V.Report]) -> Dict[str, Any]:
+    """The JSON-able row ``INVARIANTS.json`` stores for one pipeline."""
+    ab = reports["AvalBound"].summary
+    dc = reports["DispatchCount"].summary
+    kr = reports["KeyReuse"].summary
+    pl = reports["PrecisionLint"].summary
+    ca = reports["CollectiveAudit"].summary
+    return {
+        "name": spec.name,
+        "placement": spec.placement,
+        "direction": spec.direction,
+        "backend": spec.backend,
+        "min_devices": spec.min_devices,
+        "max_elements": ab["max_elements"],
+        "aval_budget": spec.aval_budget,
+        "top_level_eqns": dc["top_level_eqns"],
+        "dispatch_boundaries": dc["dispatch_boundaries"],
+        "producer_calls": dc.get("producer_calls"),
+        "key_consumptions": kr["consumptions"],
+        "distinct_keys": kr["distinct_keys"],
+        "psums": ca["psums"],
+        "gathers": ca["gathers"],
+        "violations": sorted(
+            str(v) for r in reports.values() for v in r.violations),
+    }

@@ -6,7 +6,6 @@ allocation), including abstract decode caches via ``jax.eval_shape``.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Any, Dict, Optional, Tuple
 

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from .devices import DeviceModel, effective_sigma, effective_sigma_py, quantize
 from .error_correction import denoise_least_square
-from .virtualization import MCAGeometry, reassignment_count, zero_padding
+from .virtualization import MCAGeometry, zero_padding
 from .write_verify import WriteStats
 
 __all__ = [
@@ -41,6 +41,7 @@ __all__ = [
     "matrix_write_cost",
     "input_write_cost",
     "block_keys",
+    "capacity_elements",
     "local_block_keys",
     "program_blocks",
     "programmed_block_mvm",
@@ -221,6 +222,14 @@ def block_keys(key: jax.Array, mb: int, nb: int) -> jax.Array:
     """Per-capacity-block PRNG keys, shaped (mb, nb, ...)."""
     keys = jax.random.split(key, mb * nb)
     return keys.reshape((mb, nb) + keys.shape[1:])   # typed or raw key format
+
+
+def capacity_elements(cfg: CrossbarConfig) -> int:
+    """Elements of one capacity block -- the unit every streamed/distributed
+    memory budget is expressed in (the AvalBound pass of the invariant gate
+    asserts multiples of this; see DESIGN.md section 10)."""
+    cap_m, cap_n = cfg.geom.capacity
+    return cap_m * cap_n
 
 
 def local_block_keys(key: jax.Array, mb: int, nb: int, i0, j0,

@@ -45,7 +45,6 @@ reported as the mean across MCAs (mean across devices here).
 from __future__ import annotations
 
 import warnings
-from functools import partial
 from typing import Callable, Optional, Tuple
 
 import jax

@@ -25,7 +25,6 @@ Tier 2 -- second-order denoising (paper Eq. 8-10, Algorithm 5):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -15,14 +15,12 @@ used when FSDP weight gathers would otherwise serialize in front of the dot.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compat import axis_size, pvary
-from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["int8_quantize", "int8_dequantize", "compressed_psum",
            "ring_collective_matmul"]

@@ -18,10 +18,9 @@ from __future__ import annotations
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.params import is_spec, logical_axes
+from repro.models.params import is_spec
 
 __all__ = [
     "param_rules", "resolve_pspec", "param_pspecs", "param_shardings",

@@ -700,6 +700,28 @@ class AnalogEngine:
         """Like :meth:`rmvm` but also returns this call's input-write cost."""
         return self._execute(A, y, key, with_stats=True, transpose=True)
 
+    # ------------------------------------------------------- analysis hooks
+    def mvm_fn(self, A: AnalogMatrix, *, transpose: bool = False):
+        """Traceable ``(vec, key) -> out`` closure over a programmed handle.
+
+        The canonical pipeline surface for jaxpr-level tooling: the
+        invariant registry (:mod:`repro.analysis.pipelines`) traces these
+        closures with ``ShapeDtypeStruct`` placeholders, so the verifier
+        passes see exactly the computation :meth:`mvm` / :meth:`rmvm`
+        dispatch.  See DESIGN.md section 10.
+        """
+        if transpose:
+            return lambda y, key: self.rmvm(A, y, key=key)
+        return lambda x, key: self.mvm(A, x, key=key)
+
+    @property
+    def collective_axes(self) -> Tuple[str, ...]:
+        """Mesh axes a distributed execution may legally reduce over
+        (the CollectiveAudit whitelist); empty for single-device modes."""
+        if self.execution != "distributed":
+            return ()
+        return (*self.row_axes, self.col_axis)
+
     def input_write_stats(self, A: AnalogMatrix, batch: int = 1,
                           *, transpose: bool = False) -> WriteStats:
         """Per-execution input-write cost, in the same reporting convention as

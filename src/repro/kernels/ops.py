@@ -8,12 +8,10 @@ shapes.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from . import ref as kref
 from .rram_mvm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N
 from .rram_mvm import ec_matmul as _ec_matmul
 from .rram_mvm import encode_matmul as _encode_matmul

@@ -1,7 +1,6 @@
 """Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = [

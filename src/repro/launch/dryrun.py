@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.analysis.model_flops import model_flops
 from repro.analysis.roofline import analyze_compiled
-from repro.configs import ARCHS, SHAPES, get_arch
+from repro.configs import ARCHS, get_arch
 from repro.configs.base import RRAMBackendConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell

@@ -11,8 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (SHAPES, ArchConfig, RRAMBackendConfig,
-                                ShapeConfig, TrainConfig)
+from repro.configs.base import SHAPES, ArchConfig, RRAMBackendConfig, TrainConfig
 from repro.configs.registry import (batch_specs, decode_cache_specs,
                                     decode_cache_len, model_module)
 from repro.distributed.sharding import (batch_pspec, cache_pspecs, data_axes,

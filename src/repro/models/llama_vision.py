@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .common import (Runtime, attention, attention_specs, cross_entropy_loss,
+from .common import (attention, attention_specs, cross_entropy_loss,
                      embed_spec, init_kv_cache, mlp, mlp_specs, rmsnorm,
                      rmsnorm_spec, unembed_spec)
 from .params import stack_specs

@@ -28,8 +28,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core.compat import shard_map
 from .common import (
-    Runtime, attention, attention_specs, cross_entropy_loss, dense,
-    embed_spec, init_kv_cache, rmsnorm, rmsnorm_spec, unembed_spec, _k_stencil,
+    Runtime, attention, attention_specs, cross_entropy_loss,
+    embed_spec, rmsnorm, rmsnorm_spec, unembed_spec, _k_stencil,
 )
 from .params import spec, stack_specs
 from . import transformer as base

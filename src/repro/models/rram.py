@@ -30,7 +30,7 @@ from repro.core.devices import get_device
 from repro.core.virtualization import MCAGeometry
 from repro.core.write_verify import WriteStats
 from repro.engine import AnalogEngine
-from .params import ParamSpec, is_spec, spec
+from .params import is_spec, spec
 
 __all__ = ["program_rram", "program_specs", "crossbar_cfg"]
 

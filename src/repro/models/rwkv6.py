@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .common import (Runtime, cross_entropy_loss, dense, dense_spec,
+from .common import (cross_entropy_loss, dense, dense_spec,
                      embed_spec, rmsnorm, rmsnorm_spec, unembed_spec)
 from .linear_attention import chunked_wkv, wkv_decode_step
 from .params import spec, stack_specs

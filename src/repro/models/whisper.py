@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .common import (Runtime, attention, attention_specs, cross_entropy_loss,
-                     dense, embed_spec, init_kv_cache, layernorm,
+from .common import (attention, attention_specs, cross_entropy_loss,
+                     embed_spec, init_kv_cache, layernorm,
                      layernorm_spec, mlp, mlp_specs, sinusoidal_positions,
                      unembed_spec)
 from .params import stack_specs

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .common import (Runtime, attention, attention_specs, cross_entropy_loss,
+from .common import (attention, attention_specs, cross_entropy_loss,
                      dense, dense_spec, embed_spec, init_kv_cache, rmsnorm,
                      rmsnorm_spec, unembed_spec)
 from .mamba2 import empty_state, mamba_apply, mamba_specs

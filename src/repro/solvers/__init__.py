@@ -38,13 +38,14 @@ Quickstart::
     res.ledger.iteration_energy_j           # mvms x input-write cost
 """
 from .base import LinearOperator, SolveLedger, SolveResult, as_operator
-from .krylov import bicgstab, cg, gmres
-from .pdhg import pdhg, random_feasible_lp
+from .krylov import bicgstab, cg, cg_pipeline, gmres
+from .pdhg import pdhg, pdhg_pipeline, random_feasible_lp
 from .refinement import refine
 from .stationary import estimate_omega, jacobi, richardson, spectral_bounds
 
 __all__ = [
     "LinearOperator", "SolveLedger", "SolveResult", "as_operator",
-    "bicgstab", "cg", "gmres", "pdhg", "random_feasible_lp", "refine",
+    "bicgstab", "cg", "cg_pipeline", "gmres", "pdhg", "pdhg_pipeline",
+    "random_feasible_lp", "refine",
     "estimate_omega", "jacobi", "richardson", "spectral_bounds",
 ]

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from .base import (LinearOperator, SolveResult, as_operator, col_norms,
                    init_history, pack_result, use_pallas)
 
-__all__ = ["cg", "bicgstab", "gmres"]
+__all__ = ["cg", "bicgstab", "gmres", "cg_pipeline"]
 
 _TINY = 1e-30
 
@@ -103,6 +103,24 @@ def _cg_core(op: LinearOperator, b, x0, key, *, tol: float, maxiter: int,
     return x, hist, k, mvms, rel0
 
 
+def cg_pipeline(
+    op: LinearOperator,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    backend: Optional[str] = None,
+):
+    """The jit-able CG core ``(b, x0, key) -> (x, hist, k, mvms, rel0)``.
+
+    This is the whole-solve pipeline :func:`cg` jits -- exposed so
+    jaxpr-level tooling (:mod:`repro.analysis.pipelines`, the invariant
+    gate) can trace the exact computation a solve dispatches.  ``b`` and
+    ``x0`` are (n, batch) panels.  See DESIGN.md section 10.
+    """
+    return functools.partial(_cg_core, op, tol=tol, maxiter=maxiter,
+                             use_pallas=use_pallas(backend))
+
+
 def cg(
     A,
     b: jnp.ndarray,
@@ -117,8 +135,8 @@ def cg(
     op = as_operator(A)
     bb, x0b, squeeze = _prep(b, x0)
     key = jax.random.PRNGKey(0) if key is None else key
-    core = jax.jit(functools.partial(_cg_core, op, tol=tol, maxiter=maxiter,
-                                     use_pallas=use_pallas(backend)))
+    core = jax.jit(cg_pipeline(op, tol=tol, maxiter=maxiter,
+                               backend=backend))
     x, hist, k, mvms, rel0 = core(bb, x0b, key)
     return pack_result(op, "cg", x, hist, k, mvms, tol, squeeze, rel0=rel0)
 

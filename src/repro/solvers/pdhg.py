@@ -55,7 +55,7 @@ import jax.numpy as jnp
 from .base import (LinearOperator, SolveResult, as_operator, col_norms,
                    init_history, pack_result)
 
-__all__ = ["pdhg", "random_feasible_lp"]
+__all__ = ["pdhg", "pdhg_pipeline", "random_feasible_lp"]
 
 _TINY = 1e-30
 
@@ -174,6 +174,29 @@ def _pdhg_core(op: LinearOperator, b, c, x0, y0, key, *, tau, sigma, eta,
     return x, y, hist, k, mvms, pi_mvms, rel0
 
 
+def pdhg_pipeline(
+    op: LinearOperator,
+    *,
+    tau: Optional[float] = None,
+    sigma: Optional[float] = None,
+    eta: float = 0.9,
+    tol: float = 1e-4,
+    maxiter: int = 2000,
+    power_iters: int = 16,
+):
+    """The jit-able PDHG core ``(b, c, x0, y0, key) -> (...)``.
+
+    The whole-solve pipeline :func:`pdhg` jits (step-size power iteration,
+    while-loop, KKT residuals), exposed so jaxpr-level tooling
+    (:mod:`repro.analysis.pipelines`, the invariant gate) can trace the
+    exact computation a solve dispatches.  All vector operands are
+    (m, batch) / (n, batch) panels.  See DESIGN.md section 10.
+    """
+    return functools.partial(
+        _pdhg_core, op, tau=tau, sigma=sigma, eta=eta, tol=tol,
+        maxiter=maxiter, power_iters=power_iters)
+
+
 def pdhg(
     A,
     b: jnp.ndarray,
@@ -230,9 +253,8 @@ def pdhg(
         (y0[:, None] if squeeze else y0).astype(jnp.float32)
     key = jax.random.PRNGKey(0) if key is None else key
 
-    core = jax.jit(functools.partial(
-        _pdhg_core, op, tau=tau, sigma=sigma, eta=eta, tol=tol,
-        maxiter=maxiter, power_iters=power_iters))
+    core = jax.jit(pdhg_pipeline(op, tau=tau, sigma=sigma, eta=eta, tol=tol,
+                                 maxiter=maxiter, power_iters=power_iters))
     x, y, hist, k, mvms, pi_mvms, rel0 = core(bb, cc, x0b, y0b, key)
     res = pack_result(op, "pdhg", x, hist, k, mvms, tol, squeeze,
                       mvms_single=int(pi_mvms), rel0=rel0, mvms_t=int(mvms),

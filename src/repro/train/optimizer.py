@@ -8,7 +8,6 @@ the parameter logical axes.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -13,7 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, RRAMBackendConfig
+from repro.configs.base import ModelConfig
 from repro.engine import AnalogEngine
 from repro.models.common import Runtime
 from repro.models.rram import crossbar_cfg, program_rram

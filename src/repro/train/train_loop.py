@@ -12,9 +12,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.models.common import Runtime
-from repro.distributed.fault_tolerance import (CheckpointManager, PREEMPTED,
-                                               Watchdog,
-                                               install_preemption_handler)
+from repro.distributed import (PREEMPTED, CheckpointManager, Watchdog,
+                               install_preemption_handler)
 from .optimizer import OptState, adamw_init, adamw_update
 
 __all__ = ["make_train_step", "Trainer"]

@@ -213,10 +213,11 @@ def test_distributed_pdhg_lp():
     resident=False procedural producer -- corrected analog matvec + rmatvec
     only, objective within 1e-3 of the digital PDHG oracle, and NEITHER the
     forward nor the transposed jitted MVM ever traces an A-sized aval
-    (statically asserted via max_aval_elements)."""
+    (statically asserted via the AvalBound pass)."""
     res = run_child(PRELUDE + textwrap.dedent("""
         from repro import solvers
-        from repro.analysis.memory import max_aval_elements
+        from repro.analysis import CallCounter, aval_bound, dispatch_count, \\
+            trace
         from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
         from repro.core.matrices import ImplicitBandedMatrix
         from repro.engine import AnalogEngine
@@ -226,10 +227,7 @@ def test_distributed_pdhg_lp():
                              ec=True)
         n = 256
         imp = ImplicitBandedMatrix(n=n, cap_m=32, cap_n=32, seed=7)
-        calls = {"n": 0}
-        def producer(i, j):
-            calls["n"] += 1
-            return imp.block(i, j)
+        producer = CallCounter(imp.block)
 
         de = AnalogEngine(cfg, execution="distributed", mesh=mesh)
         A = de.program(producer, key, shape=(n, n), resident=False)
@@ -242,20 +240,21 @@ def test_distributed_pdhg_lp():
                                    jnp.float32) / 4
         b = a @ x_star
         c = a.T @ y_star + s
-        after_program = calls["n"]
 
-        mx_fwd = max_aval_elements(
-            lambda v, k: de.mvm(A, v, key=k),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct(key.shape, key.dtype))
-        mx_t = max_aval_elements(
-            lambda v, k: de.rmvm(A, v, key=k),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct(key.shape, key.dtype))
+        specs = (jax.ShapeDtypeStruct((n,), jnp.float32),
+                 jax.ShapeDtypeStruct(key.shape, key.dtype))
+        jx_fwd = trace(de.mvm_fn(A), *specs)
+        fwd = aval_bound(jx_fwd, budget=n * n // 8)
+        fwd.assert_ok()
+        t = aval_bound(trace(de.mvm_fn(A, transpose=True), *specs),
+                       budget=n * n // 8)
+        t.assert_ok()
+        dispatch_count(jx_fwd, max_top_level=8).assert_ok()
+        after_program = producer.calls
 
         digital = solvers.pdhg(a, b, c, tol=1e-6, maxiter=30000)
         res = solvers.pdhg(A, b, c, tol=3e-4, maxiter=30000, key=key)
-        solve_traces = calls["n"] - after_program
+        solve_traces = producer.calls - after_program
         obj_a = float(c @ res.x)
         obj_d = float(c @ digital.x)
         print(json.dumps({
@@ -263,7 +262,8 @@ def test_distributed_pdhg_lp():
             "resid": float(res.final_residual),
             "obj_gap": abs(obj_a - obj_d) / (1 + abs(obj_d)),
             "traces": int(solve_traces),
-            "max_fwd": int(mx_fwd), "max_t": int(mx_t), "A_elems": n * n,
+            "max_fwd": int(fwd.summary["max_elements"]),
+            "max_t": int(t.summary["max_elements"]), "A_elems": n * n,
             "E": float(res.ledger.total_energy_j),
             "mvms": int(res.ledger.mvms), "mvms_t": int(res.ledger.mvms_t)}))
     """), timeout=900)
@@ -272,7 +272,7 @@ def test_distributed_pdhg_lp():
     # forward AND transposed pipelines bound strictly below A
     assert res["max_fwd"] * 8 <= res["A_elems"], res
     assert res["max_t"] * 8 <= res["A_elems"], res
-    # aval walks + one solve core: never per-block or per-iteration traces
+    # one solve core (fwd + transposed traces): never per-block/per-iteration
     assert res["traces"] <= 6, res
     assert res["mvms"] == res["iters"] + 1 and res["mvms_t"] == res["mvms"]
     assert res["E"] > 0
@@ -285,7 +285,7 @@ def test_distributed_producer_solve():
     traces an A-sized aval."""
     res = run_child(PRELUDE + textwrap.dedent("""
         from repro import solvers
-        from repro.analysis.memory import max_aval_elements
+        from repro.analysis import CallCounter, aval_bound, trace
         from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
         from repro.engine import AnalogEngine
         from repro.core.matrices import ImplicitBandedMatrix
@@ -296,10 +296,7 @@ def test_distributed_producer_solve():
         n = 256
         # procedural producer: nothing A-sized ever closes over the pipeline
         imp = ImplicitBandedMatrix(n=n, cap_m=32, cap_n=32, seed=5)
-        calls = {"n": 0}
-        def producer(i, j):
-            calls["n"] += 1
-            return imp.block(i, j)
+        producer = CallCounter(imp.block)
         x_true = jax.random.normal(jax.random.fold_in(key, 1), (n,),
                                    jnp.float32)
 
@@ -307,26 +304,28 @@ def test_distributed_producer_solve():
         A = de.program(producer, key, shape=(n, n), resident=False)
         a = A.dense()                      # host-side oracle materialization
         b = a @ x_true
-        after_program = calls["n"]
-        mx = max_aval_elements(
-            lambda v, k: de.mvm(A, v, key=k),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct(key.shape, key.dtype))
+        bound = aval_bound(
+            trace(de.mvm_fn(A), jax.ShapeDtypeStruct((n,), jnp.float32),
+                  jax.ShapeDtypeStruct(key.shape, key.dtype)),
+            budget=n * n // 8)
+        bound.assert_ok()
+        after_program = producer.calls
         res = solvers.cg(A, b, tol=1e-3, maxiter=40)
-        solve_traces = calls["n"] - after_program
+        solve_traces = producer.calls - after_program
         oracle = jnp.linalg.solve(a, b)
         print(json.dumps({
             "iters": int(res.iterations), "converged": bool(res.converged),
             "resid": float(res.final_residual),
             "traces": int(solve_traces),
-            "max_elems": int(mx), "A_elems": n * n,
+            "max_elems": int(bound.summary["max_elements"]),
+            "A_elems": n * n,
             "xerr": float(rel_l2(res.x, oracle)),
             "E": float(res.ledger.total_energy_j)}))
     """))
     assert res["converged"] and res["resid"] <= 1e-3
     assert res["iters"] >= 2
-    # probe excluded at program time; the solve adds at most ~2 traces (the
-    # aval walk + the jitted core) -- never per-block or per-iteration work
+    # probe and static walk excluded: the solve itself adds at most ~2
+    # traces (the jitted core) -- never per-block or per-iteration work
     assert res["traces"] <= 3, res
     assert res["max_elems"] * 8 <= res["A_elems"], res   # strictly sub-A
     assert res["xerr"] < 5e-3
@@ -341,7 +340,8 @@ def test_distributed_scale_65536():
     allocated (statically asserted on the exact jitted MVM)."""
     res = run_child(PRELUDE + textwrap.dedent("""
         from repro import solvers
-        from repro.analysis.memory import max_aval_elements
+        from repro.analysis import CallCounter, aval_bound, dispatch_count, \\
+            trace
         from repro.core import CrossbarConfig, MCAGeometry, get_device
         from repro.engine import AnalogEngine
         n, cap = 65536, 2048
@@ -349,30 +349,36 @@ def test_distributed_scale_65536():
                              geom=MCAGeometry(1, 1, cap, cap), k_iters=5,
                              ec=True)
         eng = AnalogEngine(cfg, execution="distributed", mesh=mesh)
-        calls = {"n": 0}
-        def producer(i, j):
+        def banded(i, j):
             # Deterministic SPD banded generator (traceable, O(block) math):
             # the n^2 encode noise already dominates the sweep, so the
             # producer itself stays RNG-free to keep the test CPU-feasible.
-            calls["n"] += 1
             rows = i * cap + jnp.arange(cap)[:, None]
             cols = j * cap + jnp.arange(cap)[None, :]
             dist = jnp.abs(rows - cols)
             blk = jnp.where(dist <= 8,
                             1.0 / (1.0 + dist.astype(jnp.float32)), 0.0)
             return blk + 16.0 * (rows == cols)
+        producer = CallCounter(banded)
         key = jax.random.PRNGKey(0)
         A = eng.program(producer, key, shape=(n, n), resident=False)
-        mx = max_aval_elements(
-            lambda x, k: eng.mvm(A, x, key=k),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct(key.shape, key.dtype))
+        jx = trace(eng.mvm_fn(A),
+                   jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct(key.shape, key.dtype))
+        # paper-scale proof on the exact jitted MVM: high-water mark is
+        # O(one capacity block) and the whole sweep is one fused dispatch
+        bound = aval_bound(jx, budget=16 * cap * cap)
+        bound.assert_ok()
+        dispatch_count(jx, max_top_level=8,
+                       producer_calls=producer.calls,
+                       max_producer_calls=3).assert_ok()
         b = jnp.ones((n,), jnp.float32)
         res = solvers.cg(A, b, tol=2e-2, maxiter=4, key=key)
         print(json.dumps({
             "iters": int(res.iterations), "converged": bool(res.converged),
-            "resid": float(res.final_residual), "calls": calls["n"],
-            "max_elems": int(mx), "A_elems": n * n,
+            "resid": float(res.final_residual), "calls": producer.calls,
+            "max_elems": int(bound.summary["max_elements"]),
+            "A_elems": n * n,
             "E_write": float(res.ledger.write_energy_j)}))
     """), timeout=1500)
     assert res["converged"], res

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import CallCounter, aval_bound, dispatch_count, trace
 from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm,
                         denoise_least_square, first_order_correct, get_device,
                         rel_l2)
@@ -39,21 +40,15 @@ def problem():
 def test_program_encodes_exactly_once(problem, monkeypatch):
     """Two successive mvm calls on one handle do zero additional encode work."""
     a, x = problem
-    calls = {"n": 0}
-    real_encode = crossbar.encode_tiled
-
-    def counting_encode(*args, **kw):
-        calls["n"] += 1
-        return real_encode(*args, **kw)
-
-    monkeypatch.setattr(crossbar, "encode_tiled", counting_encode)
+    encode = CallCounter(crossbar.encode_tiled)
+    monkeypatch.setattr(crossbar, "encode_tiled", encode)
     engine = AnalogEngine(make_cfg())
     A = engine.program(a, KEY)
-    programmed = calls["n"]
+    programmed = encode.calls
     assert programmed > 0                       # programming does encode
     y1 = engine.mvm(A, x)
     y2 = engine.mvm(A, x)
-    assert calls["n"] == programmed             # executing never re-encodes
+    assert encode.calls == programmed           # executing never re-encodes
     # successive calls draw fresh input-DAC noise, so outputs differ slightly
     assert bool(jnp.any(y1 != y2))
 
@@ -230,19 +225,9 @@ def _block_view(a, cfg):
     return a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
 
 
-def _counting_wrap(fn, calls):
-    def producer(i, j):
-        calls["n"] += 1
-        return fn(i, j)
-
-    return producer
-
-
 def _counting_producer(blocks):
-    calls = {"n": 0}
-    if blocks is None:
-        return None, calls
-    return _counting_wrap(lambda i, j: blocks[i, j], calls), calls
+    """Block producer wrapped in the verifier's trace-time call counter."""
+    return CallCounter(lambda i, j: blocks[i, j])
 
 
 def test_streamed_traceable_single_dispatch(problem):
@@ -254,17 +239,22 @@ def test_streamed_traceable_single_dispatch(problem):
     blocks = _block_view(a, cfg)
     mb, nb = blocks.shape[:2]
     assert mb * nb >= 4                      # the loop would pay >= 4 here
-    producer, calls = _counting_producer(blocks)
+    producer = _counting_producer(blocks)
     engine = AnalogEngine(cfg, execution="streamed")
     A = engine.program(producer, KEY, shape=a.shape)
     assert A.block_traceable
-    assert calls["n"] <= 3                   # traceability probe + scan trace
-    after_program = calls["n"]
+    dispatch_count(trace(engine.mvm_fn(A),
+                         jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         jax.ShapeDtypeStruct(KEY.shape, KEY.dtype)),
+                   max_top_level=8,
+                   producer_calls=producer.calls,
+                   max_producer_calls=4).assert_ok()
+    after_program = producer.calls
     y1 = engine.mvm(A, x, key=KEY)
-    assert calls["n"] - after_program <= 1   # first call traces once
-    warm = calls["n"]
+    assert producer.calls - after_program <= 1   # first call traces once
+    warm = producer.calls
     y2 = engine.mvm(A, x, key=jax.random.fold_in(KEY, 1))
-    assert calls["n"] == warm                # warm MVM: zero host work
+    assert producer.calls == warm            # warm MVM: zero host work
     assert y1.shape == y2.shape == (a.shape[0],)
     # and the scanned output matches the dense reference path
     dense = AnalogEngine(cfg)
@@ -280,19 +270,16 @@ def test_streamed_opaque_producer_host_loop(problem):
     cfg = make_cfg()
     blocks = _block_view(a, cfg)
     mb, nb = blocks.shape[:2]
-    calls = {"n": 0}
-
-    def opaque(i, j):
-        calls["n"] += 1
-        return blocks[int(i), int(j)]        # int() rejects tracers
+    # int() rejects tracers, so the producer is opaque to the scan pipeline
+    opaque = CallCounter(lambda i, j: blocks[int(i), int(j)])
 
     engine = AnalogEngine(cfg, execution="streamed")
     A = engine.program(opaque, KEY, shape=a.shape)
     assert not A.block_traceable
-    assert calls["n"] == mb * nb + 1         # +1: the failed traceability probe
-    before = calls["n"]
+    assert opaque.calls == mb * nb + 1       # +1: the failed traceability probe
+    before = opaque.calls
     y_host = engine.mvm(A, x, key=KEY)
-    assert calls["n"] - before == mb * nb    # the O(mb*nb) dispatch regime
+    assert opaque.calls - before == mb * nb  # the O(mb*nb) dispatch regime
     A_s = engine.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
     y_scan = engine.mvm(A_s, x, key=KEY)
     assert float(rel_l2(y_host, y_scan)) <= 1e-5
@@ -329,18 +316,18 @@ def test_streamed_da_and_dense_scanned(problem):
     a, _ = problem
     cfg = make_cfg()
     blocks = _block_view(a, cfg)
-    producer, calls = _counting_producer(blocks)
+    producer = _counting_producer(blocks)
     engine = AnalogEngine(cfg, execution="streamed")
     A = engine.program(producer, KEY, shape=a.shape)
-    before = calls["n"]
+    before = producer.calls
     da = A.da
-    assert calls["n"] - before <= 1          # one traced sweep, not mb*nb
+    assert producer.calls - before <= 1      # one traced sweep, not mb*nb
     np.testing.assert_allclose(np.asarray(A.a_tilde + da), np.asarray(a),
                                rtol=1e-5, atol=1e-6)
-    before = calls["n"]
+    before = producer.calls
     np.testing.assert_allclose(np.asarray(A.dense()), np.asarray(a),
                                rtol=1e-5, atol=1e-6)
-    assert calls["n"] - before <= 1          # one traced sweep, not mb*nb
+    assert producer.calls - before <= 1      # one traced sweep, not mb*nb
 
 
 def test_streamed_shim_routes_through_engine(problem):
@@ -352,10 +339,10 @@ def test_streamed_shim_routes_through_engine(problem):
     cfg = make_cfg()
     m, n = a.shape
     blocks = _block_view(a, cfg)
-    producer, calls = _counting_producer(blocks)
+    producer = _counting_producer(blocks)
     y_shim, stats = crossbar.streamed_corrected_mvm(producer, x, m, n, KEY,
                                                     cfg)
-    assert calls["n"] <= 3                   # probe + one fused scan trace
+    assert producer.calls <= 3               # probe + one fused scan trace
     engine = AnalogEngine(cfg, execution="streamed")
     A = engine.program(lambda i, j: blocks[i, j], KEY, shape=(m, n))
     y_eng = engine.mvm(A, x, key=KEY)
@@ -428,30 +415,31 @@ def test_distributed_producer_no_a_sized_allocation(problem):
     high-water mark is one capacity block (for a procedural producer, the
     paper-scale regime), and a warm MVM re-invokes the producer zero times
     (single cached dispatch)."""
-    from repro.analysis.memory import max_aval_elements
     from repro.core.matrices import ImplicitBandedMatrix
     cfg = make_cfg()
     cap_m, cap_n = cfg.geom.capacity       # 64 x 64
     n = 4 * cap_n                          # 4x4 block grid
     imp = ImplicitBandedMatrix(n=n, cap_m=cap_m, cap_n=cap_n, seed=2)
-    producer, calls = _counting_producer(None)
-    producer = _counting_wrap(imp.block, calls)
+    producer = CallCounter(imp.block)
     dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
     A = dist.program(producer, KEY, shape=(n, n), resident=False)
-    assert calls["n"] <= 2                   # probe only: nothing programmed
-    mx = max_aval_elements(
-        lambda v, k: dist.mvm(A, v, key=k),
-        jax.ShapeDtypeStruct((n,), jnp.float32),
-        jax.ShapeDtypeStruct(KEY.shape, KEY.dtype))
+    assert producer.calls <= 2               # probe only: nothing programmed
+    jx = trace(dist.mvm_fn(A),
+               jax.ShapeDtypeStruct((n,), jnp.float32),
+               jax.ShapeDtypeStruct(KEY.shape, KEY.dtype))
     # high-water mark well under A: a handful of capacity blocks, never n^2
-    assert mx <= 4 * cap_m * cap_n < n * n, (mx, n * n)
-    before = calls["n"]
+    aval_bound(jx, budget=4 * cap_m * cap_n).assert_ok()
+    assert 4 * cap_m * cap_n < n * n
+    # the whole virtual MVM is one fused dispatch, O(1) producer inlinings
+    dispatch_count(jx, max_top_level=8, producer_calls=producer.calls,
+                   max_producer_calls=3).assert_ok()
+    before = producer.calls
     x = jax.random.normal(jax.random.fold_in(KEY, 3), (n,))
     y1 = dist.mvm(A, x, key=KEY)
-    assert calls["n"] - before <= 1          # one trace
-    warm = calls["n"]
+    assert producer.calls - before <= 1      # one trace
+    warm = producer.calls
     y2 = dist.mvm(A, x, key=jax.random.fold_in(KEY, 1))
-    assert calls["n"] == warm                # warm: zero producer work
+    assert producer.calls == warm            # warm: zero producer work
     assert y1.shape == y2.shape == (n,)
 
 
@@ -660,20 +648,24 @@ def test_rmvm_streamed_single_dispatch(problem):
     a, x = problem
     cfg = make_cfg()
     blocks = _block_view(a, cfg)
-    producer, calls = _counting_producer(blocks)
+    producer = _counting_producer(blocks)
     engine = AnalogEngine(cfg, execution="streamed")
     A = engine.program(producer, KEY, shape=a.shape)
     y = jax.random.normal(jax.random.fold_in(KEY, 9), (a.shape[0],))
-    before = calls["n"]
+    dispatch_count(trace(engine.mvm_fn(A, transpose=True),
+                         jax.ShapeDtypeStruct(y.shape, y.dtype),
+                         jax.ShapeDtypeStruct(KEY.shape, KEY.dtype)),
+                   max_top_level=8).assert_ok()
+    before = producer.calls
     z1 = engine.rmvm(A, y, key=KEY)
-    assert calls["n"] - before <= 1          # one transposed trace
-    warm = calls["n"]
+    assert producer.calls - before <= 1      # one transposed trace
+    warm = producer.calls
     z2 = engine.rmvm(A, y, key=jax.random.fold_in(KEY, 1))
-    assert calls["n"] == warm                # warm rmvm: zero host work
+    assert producer.calls == warm            # warm rmvm: zero host work
     assert z1.shape == z2.shape == (a.shape[1],)
     # forward and transposed pipelines coexist on one handle
     engine.mvm(A, x, key=KEY)
-    assert calls["n"] - warm <= 1
+    assert producer.calls - warm <= 1
 
 
 # -------------------------------------------------------------- pallas backend

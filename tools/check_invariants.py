@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Invariant gate: static verifier passes over every registered pipeline.
+
+Runs the five jaxpr passes of ``repro.analysis.verify`` (AvalBound,
+DispatchCount, KeyReuse, PrecisionLint, CollectiveAudit) over every
+pipeline in ``repro.analysis.pipelines`` and compares the measured
+structural fingerprint -- largest aval, top-level dispatch counts,
+trace-time producer invocations, PRNG consumption census, collective
+census -- against the checked-in ``INVARIANTS.json`` manifest.  A PR
+that materializes an A-sized aval, adds a dispatch, reuses a key,
+drops to f16 in a carry, or widens a collective fails here before any
+numeric test could notice.
+
+Nothing numeric runs: pipelines are traced with ShapeDtypeStruct
+placeholders (building a spec may program one small resident image).
+The process forces 8 host devices so the 2x4-mesh entries verify on
+any machine, exactly as in CI.
+
+Usage:
+
+    PYTHONPATH=src python tools/check_invariants.py            # gate
+    PYTHONPATH=src python tools/check_invariants.py --update   # re-baseline
+    PYTHONPATH=src python tools/check_invariants.py --report out.json
+
+``--update`` rewrites the manifest after an *intentional* pipeline
+change -- commit the diff and say why in the PR.  ``--report`` writes
+the full per-pass summaries (uploaded as a CI artifact).
+See docs/analysis.md and DESIGN.md section 10.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+# 8 host devices BEFORE importing jax: the 2x4-mesh entries must verify
+# identically on a laptop, the CI runner, and a real multi-device host.
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+MANIFEST = REPO / "INVARIANTS.json"
+
+
+def run_pipelines():
+    from repro.analysis import pipelines as P
+    rows = {}
+    reports_out = {}
+    for spec in P.available_pipelines():
+        reports = P.verify_pipeline(spec)
+        rows[spec.name] = P.manifest_record(spec, reports)
+        reports_out[spec.name] = {
+            name: {"ok": r.ok, "summary": r.summary,
+                   "violations": [str(v) for v in r.violations]}
+            for name, r in reports.items()}
+        status = "ok" if not rows[spec.name]["violations"] else "FAIL"
+        print(f"[invariants] {spec.name}: {status} "
+              f"max_elements={rows[spec.name]['max_elements']} "
+              f"top_level={rows[spec.name]['top_level_eqns']}")
+    return rows, reports_out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite INVARIANTS.json from the measured values")
+    ap.add_argument("--report", metavar="PATH",
+                    help="write full per-pass report JSON (CI artifact)")
+    args = ap.parse_args()
+
+    rows, reports = run_pipelines()
+    if args.report:
+        pathlib.Path(args.report).write_text(
+            json.dumps(reports, indent=2, sort_keys=True) + "\n")
+        print(f"[invariants] report written to {args.report}")
+
+    errors = []
+    for name, row in rows.items():
+        for v in row["violations"]:
+            errors.append(f"{name}: {v}")
+
+    if args.update:
+        MANIFEST.write_text(
+            json.dumps(rows, indent=2, sort_keys=True) + "\n")
+        print(f"[invariants] manifest rewritten: {MANIFEST.name} "
+              f"({len(rows)} pipelines)")
+        if errors:
+            print("\n".join(["", "PASS VIOLATIONS (manifest written anyway, "
+                             "fix before committing):"] + errors),
+                  file=sys.stderr)
+            return 1
+        return 0
+
+    if not MANIFEST.exists():
+        errors.append(
+            f"{MANIFEST.name} missing -- generate it with --update and "
+            "commit it")
+        stored = {}
+    else:
+        stored = json.loads(MANIFEST.read_text())
+
+    for name in sorted(set(stored) - set(rows)):
+        errors.append(f"{name}: in manifest but not registered/runnable")
+    for name in sorted(set(rows) - set(stored)):
+        errors.append(f"{name}: registered but missing from manifest "
+                      "(run --update)")
+    for name in sorted(set(rows) & set(stored)):
+        got, want = rows[name], stored[name]
+        for key in sorted(set(got) | set(want)):
+            if got.get(key) != want.get(key):
+                errors.append(
+                    f"{name}.{key}: measured {got.get(key)!r} != manifest "
+                    f"{want.get(key)!r} (intentional? run --update and "
+                    "explain in the PR)")
+
+    if errors:
+        print("\n".join(["", "INVARIANT FAILURES:"] + errors), file=sys.stderr)
+        return 1
+    print(f"invariants OK ({len(rows)} pipelines, 5 passes each)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Lint gate: ruff + mypy over ``src/`` (configs in pyproject.toml).
+
+Both tools are optional at runtime so the gate degrades gracefully in the
+hermetic test container (no installs available there): whatever is present
+runs; whatever is absent is skipped with a note. CI installs both, so the
+full gate runs on every push. Either way a built-in AST fallback always
+runs: syntax errors and unused imports in ``src/`` fail the build even with
+no linters installed.
+
+Usage:
+
+    PYTHONPATH=src python tools/check_lint.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import shutil
+import subprocess
+import sys
+from typing import List
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def run_tool(name: str, args: List[str]) -> bool | None:
+    """Run an external linter; returns None when it is not installed."""
+    if shutil.which(name) is None:
+        print(f"[lint] {name}: not installed, skipped (CI runs it)")
+        return None
+    proc = subprocess.run([name, *args], cwd=REPO)
+    status = "OK" if proc.returncode == 0 else f"FAILED ({proc.returncode})"
+    print(f"[lint] {name}: {status}")
+    return proc.returncode == 0
+
+
+def _used_names(tree: ast.AST) -> set:
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # dotted use: collect the root name (``np`` of ``np.prod``)
+            inner = node
+            while isinstance(inner, ast.Attribute):
+                inner = inner.value
+            if isinstance(inner, ast.Name):
+                used.add(inner.id)
+    return used
+
+
+def ast_fallback() -> List[str]:
+    """Syntax + unused-import sweep over src/ with the stdlib only."""
+    errors: List[str] = []
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(REPO)
+        try:
+            tree = ast.parse(path.read_text(), filename=str(rel))
+        except SyntaxError as e:
+            errors.append(f"{rel}:{e.lineno}: syntax error: {e.msg}")
+            continue
+        if path.name == "__init__.py":
+            continue  # re-export hubs import for the namespace
+        source = path.read_text()
+        used = _used_names(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                names = [(a.asname or a.name.split(".")[0], a) for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                # __future__ has side effects; typing-only imports may live
+                # purely inside string annotations -- ruff handles those.
+                if node.module in ("__future__", "typing"):
+                    continue
+                names = [(a.asname or a.name, a) for a in node.names
+                         if a.name != "*"]
+            else:
+                continue
+            for bound, alias in names:
+                if bound in used or bound.startswith("_"):
+                    continue
+                if f'"{bound}"' in source or f"'{bound}'" in source:
+                    continue  # __all__ / getattr-style references
+                errors.append(
+                    f"{rel}:{node.lineno}: unused import '{bound}'")
+    return errors
+
+
+def main() -> int:
+    failed = False
+    for name, args in (("ruff", ["check", "src"]),
+                       ("mypy", ["src/repro"])):
+        ok = run_tool(name, args)
+        if ok is False:
+            failed = True
+
+    errors = ast_fallback()
+    if errors:
+        print("\n".join(["", "AST LINT FAILURES:"] + errors), file=sys.stderr)
+        failed = True
+    else:
+        n = len(list(SRC.rglob("*.py")))
+        print(f"[lint] ast fallback: OK ({n} files)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
