@@ -23,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (lm_step, pdhg_convergence, solver_convergence,
+    from . import (lm_step, pdhg_convergence, serving, solver_convergence,
                    streamed_scaling, strong_scaling, table1_ec, weak_scaling,
                    writeverify_sweep)
     modules = [
@@ -35,6 +35,7 @@ def main() -> None:
         ("strong_scaling", strong_scaling),
         ("streamed_scaling", streamed_scaling),
         ("lm_step", lm_step),
+        ("serving", serving),
     ]
     print("name,us_per_call,derived")
     for name, mod in modules:

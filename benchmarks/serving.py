@@ -1,0 +1,183 @@
+"""Serving under synthetic traffic: SLO + energy rows for the analog stack.
+
+Two scenario families over the :mod:`repro.serving` simulator:
+
+  * **service quality** -- one seeded mixed-tenant trace (two zoo models:
+    rwkv6-1.6b + qwen3-1.7b, Zipf-skewed tenants, Poisson arrivals) served by
+    the digital fp32 baseline and by the analog backend on >= 2 device
+    configs.  Rows report tokens/sec, p50/p99 latency, and joules-per-token;
+    analog rows run the REAL Server numerics (jitted prefill + ONE scan-fused
+    decode dispatch per batch) while the analytic write-cost model drives the
+    simulated clock.
+  * **eviction policy** -- the skewed-tenant cache-pressure trace (one hot
+    expensive image + rotating cold cheap tenants, capacity fits the hot
+    image plus one small) replayed under LRU and under the write-cost-aware
+    policy.  The acceptance contract asserts the write-cost-aware policy pays
+    STRICTLY less total write energy than LRU on the same trace.
+
+Results land in ``BENCH_serving.json`` (full runs refresh the checked-in
+baseline at the repo root; smoke/quick runs write to the temp dir), stamped
+with ``run_metadata()``.
+
+    PYTHONPATH=src python -m benchmarks.serving            # quick
+    PYTHONPATH=src python -m benchmarks.serving --smoke    # CI
+    PYTHONPATH=src python -m benchmarks.serving --full
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Dict, List
+
+from repro.configs.base import RRAMBackendConfig
+from repro.serving import (BatchingConfig, ServingConfig, TenantSpec,
+                           TrafficConfig, simulate)
+
+from .common import run_metadata
+
+OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+DEVICES_QUICK = ["epiram"]
+DEVICES_FULL = ["epiram", "taox-hfox"]
+
+# capacity fits the hot rwkv6 image (~672 KiB) + one zamba2 image (~240 KiB)
+SKEW_CAPACITY = 1_100_000
+
+_BATCHING = BatchingConfig(max_batch=4, prompt_buckets=(8, 16),
+                           decode_buckets=(4, 8), batch_buckets=(1, 2, 4))
+
+
+def _mixed_cfg(n_requests: int, rram, seed: int = 0) -> ServingConfig:
+    """The service-quality trace: two zoo models, four tenants, Zipf skew."""
+    tenants = (TenantSpec("acme", "rwkv6-1.6b"),
+               TenantSpec("globex", "qwen3-1.7b"),
+               TenantSpec("initech", "rwkv6-1.6b"),
+               TenantSpec("umbrella", "qwen3-1.7b"))
+    traffic = TrafficConfig(n_requests=n_requests, rate_rps=6.0, zipf_s=1.0,
+                            prompt_lens=(6, 12), prompt_mix=(0.6, 0.4),
+                            decode_lens=(4, 8), decode_mix=(0.6, 0.4),
+                            seed=seed)
+    return ServingConfig(tenants=tenants, traffic=traffic, batching=_BATCHING,
+                         rram=rram, cache_capacity_bytes=1 << 23,
+                         policy="write_cost", seed=seed, max_len=32)
+
+
+def _skew_cfg(n_requests: int, policy: str, seed: int = 0) -> ServingConfig:
+    """The cache-pressure trace: hot expensive tenant + cold cheap tenants."""
+    tenants = (TenantSpec("hot", "rwkv6-1.6b"),
+               TenantSpec("cold-a", "zamba2-1.2b"),
+               TenantSpec("cold-b", "zamba2-1.2b"),
+               TenantSpec("cold-c", "zamba2-1.2b"),
+               TenantSpec("cold-d", "zamba2-1.2b"))
+    traffic = TrafficConfig(n_requests=n_requests, rate_rps=2.0, zipf_s=1.0,
+                            prompt_lens=(6, 12), prompt_mix=(0.6, 0.4),
+                            decode_lens=(4, 8), decode_mix=(0.6, 0.4),
+                            seed=seed)
+    return ServingConfig(tenants=tenants, traffic=traffic,
+                         batching=dataclasses.replace(_BATCHING, max_batch=2),
+                         rram=RRAMBackendConfig(enabled=True),
+                         cache_capacity_bytes=SKEW_CAPACITY, policy=policy,
+                         seed=seed, max_len=32, run_model=False)
+
+
+def _service_row(name: str, summary: Dict) -> Dict:
+    row = {
+        "name": name,
+        "tokens_per_s": summary["tokens_per_s"],
+        "p50_latency_s": summary["p50_latency_s"],
+        "p99_latency_s": summary["p99_latency_s"],
+        "joules_per_token": summary["joules_per_token"],
+        "exec_energy_j": summary["exec_energy_j"],
+        "write_energy_j": summary["write_energy_j"],
+        "padding_overhead": summary["padding_overhead"],
+        "n_requests": summary["n_requests"],
+        "useful_tokens": summary["useful_tokens"],
+    }
+    if "cache" in summary:
+        row["cache_hits"] = summary["cache"]["hits"]
+        row["cache_reprograms"] = summary["cache"]["reprograms"]
+    return row
+
+
+def run(quick: bool = True, smoke: bool = False) -> List[Dict]:
+    n = 8 if smoke else (24 if quick else 64)
+    n_skew = 24 if smoke else (36 if quick else 96)
+    devices = DEVICES_QUICK if (quick or smoke) else DEVICES_FULL
+
+    rows = [_service_row("serving/digital",
+                         simulate(_mixed_cfg(n, None)).summary)]
+    for device in devices:
+        rram = RRAMBackendConfig(enabled=True, device=device)
+        rows.append(_service_row(f"serving/analog/{device}",
+                                 simulate(_mixed_cfg(n, rram)).summary))
+
+    for policy in ("lru", "write_cost"):
+        res = simulate(_skew_cfg(n_skew, policy))
+        cs = res.cache_stats
+        rows.append({
+            "name": f"serving/evict/{policy}",
+            "write_energy_j": cs["write_energy_j"],
+            "reprograms": cs["reprograms"],
+            "evictions": cs["evictions"],
+            "hits": cs["hits"],
+            "misses": cs["misses"],
+            "joules_per_token": res.summary["joules_per_token"],
+            "p99_latency_s": res.summary["p99_latency_s"],
+        })
+
+    _write_json(rows, quick or smoke,
+                "smoke" if smoke else ("quick" if quick else "full"))
+    return rows
+
+
+def _out_path(quick: bool) -> str:
+    if quick:
+        return os.path.join(tempfile.gettempdir(),
+                            "BENCH_serving.smoke.json")
+    return OUT_JSON
+
+
+def _write_json(rows: List[Dict], quick: bool, mode: str) -> str:
+    payload = {
+        "bench": "serving",
+        "mode": mode,
+        "metadata": run_metadata(),
+        "rows": rows,
+    }
+    out = _out_path(quick)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace, one device (CI fast job); writes to "
+                         "the temp dir")
+    ap.add_argument("--full", action="store_true",
+                    help="full trace + both devices; refreshes the "
+                         "checked-in JSON")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        extra = (f"write {r['write_energy_j']:.2e} J"
+                 if r["name"].startswith("serving/evict")
+                 else f"{r['tokens_per_s']:.2f} tok/s, "
+                      f"p99 {r['p99_latency_s']:.2f} s")
+        print(f"{r['name']}: j/tok {r['joules_per_token']:.3e}, {extra}")
+    print(f"wrote {_out_path(not args.full)}")
+    # CI contract: write-cost-aware eviction strictly beats LRU on total
+    # write energy for the same skewed trace.
+    lru = next(r for r in rows if r["name"] == "serving/evict/lru")
+    wc = next(r for r in rows if r["name"] == "serving/evict/write_cost")
+    assert wc["write_energy_j"] < lru["write_energy_j"], (wc, lru)
+
+
+if __name__ == "__main__":
+    main()

@@ -202,6 +202,27 @@ def _build_pdhg(mesh_shape: Tuple[int, int]) -> BuiltPipeline:
         producer=producer, allowed_axes=engine.collective_axes)
 
 
+def _build_serving_decode() -> BuiltPipeline:
+    """The serving decode hot path: an analog LM Server's ENTIRE n-token
+    greedy decode as one ``lax.scan`` -- the fused pipeline every
+    :mod:`repro.serving` batch dispatches exactly once (see DESIGN.md
+    section 11)."""
+    from repro.configs.base import RRAMBackendConfig
+    from repro.configs.registry import get_arch, model_module
+    from repro.models import params as P
+    from repro.models.common import Runtime
+    from repro.train.serve import Server
+    cfg = get_arch("rwkv6-1.6b").reduced()
+    mod = model_module(cfg)
+    prm = P.materialize(mod.init_specs(cfg), _key(), jnp.float32)
+    srv = Server(mod, cfg, prm,
+                 rt=Runtime(rram=RRAMBackendConfig(enabled=True)),
+                 max_len=32, key=_key())
+    caches = jax.eval_shape(lambda: mod.init_caches(2, cfg))
+    tok = jax.ShapeDtypeStruct((2, 1), jnp.int32)
+    return BuiltPipeline(fn=srv.decode_fn(8), args=(tok, caches))
+
+
 def _cap2(cfg_fn: Callable) -> int:
     from repro.core.crossbar import capacity_elements
     return capacity_elements(cfg_fn())
@@ -256,6 +277,11 @@ def registered_pipelines() -> List[PipelineSpec]:
         placement="streamed", direction="solve", backend="reference",
         build=_build_cg, aval_budget=64 * small, max_producer_calls=3,
         max_top_level=24, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="serving-decode-fused-rwkv6",
+        placement="local", direction="decode", backend="reference",
+        build=_build_serving_decode, aval_budget=1 << 20,
+        max_top_level=1, allow_baked=True))
     specs.append(PipelineSpec(
         name="solve-pdhg-distributed-virtual65536-1x1",
         placement="distributed", direction="solve", backend="reference",

@@ -280,6 +280,38 @@ class AnalogMatrix:
         """Per-execution write cost (x DAC pass + EC X^T replica)."""
         return self.engine.input_write_stats(self, batch)
 
+    @property
+    def image_nbytes(self) -> int:
+        """Resident bytes of this handle's programmed operands.
+
+        Counts the stored image/correction layout (blocks or dense) plus any
+        derived caches built by executions (padded pallas layout); block_fn
+        producers are code, not residency, and count zero.  This is the unit
+        the serving :class:`~repro.serving.cache.ImageCache` budgets in."""
+        total = 0
+        for arr in (self.at_blocks, self.da_blocks, self.at_dense,
+                    self.da_dense):
+            if arr is not None and hasattr(arr, "nbytes"):
+                total += int(arr.nbytes)
+        if self._padded is not None:
+            total += sum(int(p.nbytes) for p in self._padded
+                         if hasattr(p, "nbytes"))
+        return total
+
+    def release(self) -> int:
+        """Drop derived execution caches (padded layout, jitted scan
+        pipelines), returning the bytes freed.  The programmed image itself
+        survives -- eviction of the image is the cache owner dropping its
+        reference to the whole handle; ``release`` is the cheaper lever for
+        staying under budget without paying a reprogram."""
+        freed = 0
+        if self._padded is not None:
+            freed = sum(int(p.nbytes) for p in self._padded
+                        if hasattr(p, "nbytes"))
+            self._padded = None
+        self._scan_exec = None
+        return freed
+
 
 @dataclasses.dataclass(frozen=True)
 class TransposedAnalogMatrix:

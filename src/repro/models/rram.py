@@ -25,14 +25,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RRAMBackendConfig
-from repro.core.crossbar import CrossbarConfig, matrix_write_cost
+from repro.core.crossbar import CrossbarConfig, input_write_cost, \
+    matrix_write_cost
 from repro.core.devices import get_device
 from repro.core.virtualization import MCAGeometry
 from repro.core.write_verify import WriteStats
 from repro.engine import AnalogEngine
 from .params import is_spec, spec
 
-__all__ = ["program_rram", "program_specs", "crossbar_cfg"]
+__all__ = ["program_rram", "program_specs", "crossbar_cfg", "is_programmed",
+           "strip_rram", "reprogram_rram", "analog_image_bytes",
+           "programmed_kernel_shapes", "forward_input_stats"]
 
 
 def crossbar_cfg(cfg: RRAMBackendConfig) -> CrossbarConfig:
@@ -99,6 +102,110 @@ def program_rram(
         return out
 
     return visit(params), total
+
+
+def is_programmed(params: Any) -> bool:
+    """True iff the pytree already carries analog images (``w_tilde``)."""
+    found = [False]
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            if "w_tilde" in tree:
+                found[0] = True
+            for sub in tree.values():
+                visit(sub)
+
+    visit(params)
+    return found[0]
+
+
+def strip_rram(params: Any) -> Any:
+    """Drop every ``w_tilde``/``dw`` sibling, returning digital-only params."""
+
+    def visit(tree):
+        if not isinstance(tree, dict):
+            return tree
+        return {name: visit(sub) for name, sub in tree.items()
+                if name not in ("w_tilde", "dw")}
+
+    return visit(params)
+
+
+def reprogram_rram(
+    params: Any,
+    cfg: RRAMBackendConfig,
+    key: jax.Array,
+    *,
+    engine: Optional[AnalogEngine] = None,
+) -> Tuple[Any, WriteStats]:
+    """Program a (possibly already-programmed) pytree under a fresh key.
+
+    The per-tenant entry point for the serving image cache: the same digital
+    weights programmed under two different keys produce independent device
+    draws (independent ``w_tilde`` noise), and every reprogram is billed the
+    full one-time matrix :class:`WriteStats` again -- this is the cost a
+    write-cost-aware eviction policy is trying not to pay twice."""
+    return program_rram(strip_rram(params), cfg, key, engine=engine)
+
+
+def analog_image_bytes(params: Any) -> int:
+    """Resident bytes of the programmed analog operands (w_tilde + dw).
+
+    The serving cache's capacity accounting: what it costs to *keep* a
+    tenant's image programmed, as opposed to the :class:`WriteStats` energy
+    it costs to *create* it."""
+    total = [0]
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            for name, sub in tree.items():
+                if name in ("w_tilde", "dw") and hasattr(sub, "nbytes"):
+                    total[0] += int(sub.nbytes)
+                else:
+                    visit(sub)
+
+    visit(params)
+    return total[0]
+
+
+def programmed_kernel_shapes(params: Any) -> Tuple[Tuple[int, int, int], ...]:
+    """(layers, d_in, d_out) of every programmed kernel (layers=1 if 2-D)."""
+    out = []
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            for name, sub in tree.items():
+                if name == "w_tilde" and hasattr(sub, "ndim"):
+                    if sub.ndim == 2:
+                        out.append((1, sub.shape[0], sub.shape[1]))
+                    else:
+                        out.append(tuple(int(d) for d in sub.shape))
+                else:
+                    visit(sub)
+
+    visit(params)
+    return tuple(out)
+
+
+def forward_input_stats(params: Any, cfg: RRAMBackendConfig,
+                        batch: int = 1) -> WriteStats:
+    """Per-forward-pass input-DAC cost through every programmed kernel.
+
+    One token position through ``dense(x, w)`` is one corrected MVM against
+    the analog operator A = w^T of shape (d_out, d_in); a forward pass with
+    ``batch`` positions therefore pays ``input_write_cost(d_out, d_in,
+    batch=batch)`` per layer.  This is the per-MVM side of the
+    ``SolveLedger`` split -- the marginal energy/latency of one decode step
+    (``batch=B``) or one prefill (``batch=B*T``) once the image is resident.
+    """
+    ccfg = crossbar_cfg(cfg)
+    total = WriteStats.zero()
+    for layers, d_in, d_out in programmed_kernel_shapes(params):
+        per = input_write_cost(d_out, d_in, ccfg, batch=batch)
+        total = total + WriteStats(
+            energy_j=per.energy_j * layers, latency_s=per.latency_s * layers,
+            iterations=per.iterations, final_delta=per.final_delta)
+    return total
 
 
 def program_specs(specs: Any, cfg: RRAMBackendConfig) -> Any:

@@ -1,0 +1,242 @@
+"""Deterministic event-loop serving simulator: traffic -> cache -> batcher ->
+prefill/fused-decode.
+
+One simulated analog engine serves a multi-tenant request trace.  The loop:
+
+  1. if nothing has arrived, jump the clock to the next arrival;
+  2. pack a batch around the oldest waiting request
+     (:class:`~repro.serving.batching.RequestQueue` -- head-of-line FIFO);
+  3. acquire the tenant's programmed image from the
+     :class:`~repro.serving.cache.ImageCache` -- a miss runs
+     ``program_rram``/``reprogram_rram`` under a fresh per-build key and
+     stalls the engine for the write-verify latency;
+  4. execute the batch through the REAL :class:`~repro.train.serve.Server`
+     numerics (one jitted prefill + ONE scan-fused decode dispatch) at the
+     padded bucket shapes, while the analytic cost model
+     (:func:`~repro.models.rram.forward_input_stats` /
+     :func:`~repro.serving.metrics.digital_cost`) advances the simulated
+     clock and energy ledgers;
+  5. record each member's finish at its OWN last token (shorter members of a
+     batch finish before the batch's padded decode completes).
+
+Everything observable -- request order, eviction sequence, latencies, joules
+-- is a pure function of the config; the replay test runs ``simulate`` twice
+in one process and asserts identical records and summaries.
+
+Model execution can be disabled (``run_model=False``) for policy sweeps where
+only the clock/energy trajectory matters; metrics are identical either way
+because service costs are analytic (the numerics validate the pipeline and
+return the actual greedy tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RRAMBackendConfig
+from repro.configs.registry import get_arch, model_module
+from repro.models import params as P
+from repro.models.common import Runtime
+from repro.models.rram import analog_image_bytes, forward_input_stats, \
+    strip_rram
+from repro.train.serve import Server
+
+from .batching import Batch, BatchingConfig, RequestQueue
+from .cache import ImageCache
+from .metrics import MetricsAccumulator, RequestRecord, digital_cost
+from .traffic import TenantSpec, TrafficConfig, generate_trace
+
+__all__ = ["ServingConfig", "SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """One serving scenario: who sends traffic, on what backend, under which
+    cache policy.  ``rram=None`` is the digital fp32 baseline (no programming,
+    no cache pressure -- weights live in DRAM)."""
+
+    tenants: Tuple[TenantSpec, ...]
+    traffic: TrafficConfig
+    batching: BatchingConfig = BatchingConfig()
+    rram: Optional[RRAMBackendConfig] = None
+    cache_capacity_bytes: int = 1 << 30
+    policy: str = "write_cost"
+    seed: int = 0
+    max_len: int = 128
+    run_model: bool = True
+
+
+@dataclasses.dataclass
+class SimResult:
+    summary: Dict[str, Any]
+    records: Tuple[RequestRecord, ...]
+    cache_stats: Optional[Dict[str, Any]]
+
+
+def _digital_params(arch_name: str, seed: int):
+    """(cfg, mod, digital params, n_params) for one zoo arch, reduced."""
+    cfg = get_arch(arch_name).reduced()
+    mod = model_module(cfg)
+    prm = P.materialize(mod.init_specs(cfg), jax.random.PRNGKey(seed),
+                        jnp.float32)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(prm)
+                   if hasattr(x, "shape"))
+    return cfg, mod, prm, n_params
+
+
+def _batch_inputs(batch: Batch, cfg) -> Dict[str, jnp.ndarray]:
+    """Synthesize the padded model inputs for one batch, deterministically
+    from each request's ``token_seed`` (pad rows repeat the last member)."""
+    rows = []
+    for r in batch.requests:
+        rng = np.random.Generator(np.random.PCG64(r.token_seed))
+        rows.append(rng.integers(0, cfg.vocab, size=batch.prompt_bucket))
+    while len(rows) < batch.batch_pad:
+        rows.append(rows[-1])
+    out: Dict[str, jnp.ndarray] = {
+        "tokens": jnp.asarray(np.stack(rows), dtype=jnp.int32)}
+    if cfg.family == "whisper":
+        out["frames"] = _extra_feature(
+            batch, (batch.prompt_bucket, cfg.d_model))
+    elif cfg.family == "llama_vision":
+        out["patches"] = _extra_feature(
+            batch, (cfg.n_patches, cfg.d_model))
+    return out
+
+
+def _extra_feature(batch: Batch, shape: Tuple[int, ...]) -> jnp.ndarray:
+    rows = []
+    for r in batch.requests:
+        rng = np.random.Generator(np.random.PCG64(r.token_seed + 1))
+        rows.append(rng.standard_normal(size=shape) * 0.1)
+    while len(rows) < batch.batch_pad:
+        rows.append(rows[-1])
+    return jnp.asarray(np.stack(rows), dtype=jnp.float32)
+
+
+class _Fleet:
+    """Per-tenant Server acquisition through the image cache.
+
+    Digital weights are materialized ONCE per arch and shared by every tenant
+    of that arch; each (tenant, build) programs its own analog image under
+    ``fold_in(base, tenant_index, build_count)`` -- independent device draws
+    per tenant and per reprogram."""
+
+    def __init__(self, cfg: ServingConfig):
+        self.cfg = cfg
+        self._arch: Dict[str, Tuple[Any, Any, Any, int]] = {}
+        self._builds: Dict[str, int] = {}
+        self._tenant_ix = {t.name: i for i, t in enumerate(cfg.tenants)}
+        self._tenant_arch = {t.name: t.arch for t in cfg.tenants}
+        self._digital_servers: Dict[str, Server] = {}
+        self.cache: Optional[ImageCache] = None
+        if cfg.rram is not None:
+            self.cache = ImageCache(cfg.cache_capacity_bytes, cfg.policy)
+
+    def arch_state(self, arch: str):
+        if arch not in self._arch:
+            self._arch[arch] = _digital_params(arch, self.cfg.seed)
+        return self._arch[arch]
+
+    def n_params(self, arch: str) -> int:
+        return self.arch_state(arch)[3]
+
+    def acquire(self, tenant: str, now: float) -> Tuple[Server, Any]:
+        """(server, cache outcome or None).  Analog: through the cache, a
+        miss programs (stalling for write latency is the caller's job, via
+        the outcome's write_stats)."""
+        arch = self._tenant_arch[tenant]
+        cfg, mod, prm, _ = self.arch_state(arch)
+        if self.cache is None:
+            srv = self._digital_servers.get(tenant)
+            if srv is None:
+                srv = Server(mod, cfg, prm, rt=Runtime(),
+                             max_len=self.cfg.max_len,
+                             key=jax.random.PRNGKey(self.cfg.seed))
+                self._digital_servers[tenant] = srv
+            return srv, None
+
+        def build():
+            n = self._builds.get(tenant, 0)
+            self._builds[tenant] = n + 1
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                   self._tenant_ix[tenant]), n)
+            srv = Server(mod, cfg, strip_rram(prm),
+                         rt=Runtime(rram=self.cfg.rram),
+                         max_len=self.cfg.max_len, key=key)
+            return srv, analog_image_bytes(srv.params), srv.write_stats
+
+        return self.cache.get(tenant, build, now)
+
+
+def simulate(cfg: ServingConfig) -> SimResult:
+    """Run the trace to completion; returns summary + per-request records."""
+    trace = generate_trace(cfg.tenants, cfg.traffic)
+    queue = RequestQueue(cfg.batching)
+    for r in trace:
+        queue.add(r)
+    fleet = _Fleet(cfg)
+    metrics = MetricsAccumulator()
+    now = 0.0
+
+    while len(queue):
+        batch = queue.form_batch(now)
+        if batch is None:
+            nxt = queue.next_arrival(now)
+            assert nxt is not None, "queue non-empty but nothing arriving"
+            now = nxt
+            continue
+
+        server, outcome = fleet.acquire(batch.tenant, now)
+        if outcome is not None and not outcome.hit:
+            # reprogramming stalls the engine for the write-verify latency
+            now += float(outcome.write_stats.latency_s)
+
+        start = now
+        if cfg.run_model:
+            toks = server.generate(_batch_inputs(batch, server.cfg),
+                                   batch.decode_bucket)
+            assert toks.shape == (batch.batch_pad, batch.decode_bucket)
+
+        # analytic service cost at the PADDED shapes
+        if cfg.rram is not None:
+            pre = forward_input_stats(server.params, cfg.rram,
+                                      batch=batch.padded_prompt_tokens)
+            step = forward_input_stats(server.params, cfg.rram,
+                                       batch=batch.batch_pad)
+            pre_j, pre_s = float(pre.energy_j), float(pre.latency_s)
+            step_j, step_s = float(step.energy_j), float(step.latency_s)
+        else:
+            n_params = fleet.n_params(batch.arch)
+            pre_c = digital_cost(n_params, batch.padded_prompt_tokens)
+            step_c = digital_cost(n_params, batch.batch_pad)
+            pre_j, pre_s = pre_c["energy_j"], pre_c["latency_s"]
+            step_j, step_s = step_c["energy_j"], step_c["latency_s"]
+
+        exec_j = pre_j + step_j * batch.decode_bucket
+        useful = batch.useful_prompt_tokens + batch.useful_decode_tokens
+        padded = batch.padded_prompt_tokens + batch.padded_decode_tokens
+        metrics.add_batch(exec_j, useful, padded)
+
+        for r in batch.requests:
+            r_useful = r.prompt_len + r.decode_len
+            metrics.add_record(RequestRecord(
+                rid=r.rid, tenant=r.tenant, arch=r.arch,
+                arrival_s=r.arrival_s, start_s=start,
+                finish_s=start + pre_s + step_s * r.decode_len,
+                prompt_len=r.prompt_len, decode_len=r.decode_len,
+                energy_j=exec_j * r_useful / max(useful, 1)))
+        # the engine is busy until the padded decode completes
+        now = start + pre_s + step_s * batch.decode_bucket
+
+    cache_stats = fleet.cache.stats() if fleet.cache is not None else None
+    return SimResult(summary=metrics.summary(cache_stats),
+                     records=tuple(sorted(metrics.records,
+                                          key=lambda r: r.rid)),
+                     cache_stats=cache_stats)

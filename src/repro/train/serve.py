@@ -1,9 +1,25 @@
-"""Serving: prefill + greedy decode drivers, with optional RRAM analog
+"""Serving: prefill + scan-fused greedy decode, with optional RRAM analog
 backend (the paper's technique as a deployment mode -- weights are programmed
 onto an :class:`~repro.engine.AnalogEngine` exactly once at server
 construction; per-token MVMs then run through the two-tier-EC analog
 simulation with zero re-encode work, so decode steps pay only the input-DAC
 cost).
+
+Dispatch discipline: ``generate`` is TWO device dispatches total -- one jitted
+prefill and one jitted ``lax.scan`` over the whole token axis (the PR 3
+dispatch-fusion pattern applied to decode).  The per-token Python loop of the
+seed implementation (one dispatch per token) is gone; the
+``repro.analysis.verify`` DispatchCount pass pins the fused pipeline in the
+invariant manifest (see :func:`Server.decode_fn` and
+:mod:`repro.analysis.pipelines`).
+
+Programming is factored out of construction: a :class:`Server` built with
+already-programmed params (``w_tilde``/``dw`` present -- e.g. handed out by
+the :mod:`repro.serving` image cache) skips ``program_rram`` entirely, so a
+cache hit pays zero write cost.  The programming PRNG key is injectable
+(``key=``): two tenants programming the SAME weights under different keys get
+independent device draws (required for honest cache-reprogram noise
+statistics; the seed's hardcoded ``PRNGKey(7)`` remains the default).
 """
 from __future__ import annotations
 
@@ -16,13 +32,23 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.engine import AnalogEngine
 from repro.models.common import Runtime
-from repro.models.rram import crossbar_cfg, program_rram
+from repro.models.rram import crossbar_cfg, is_programmed, program_rram
 
 __all__ = ["Server", "greedy_generate"]
 
 
 @dataclasses.dataclass
 class Server:
+    """One deployed model instance: programmed weights + jitted step fns.
+
+    ``key`` seeds BOTH the one-time analog programming draws and the runtime
+    DAC noise schedule (prefill consumes fold 1.0, decode step ``t`` consumes
+    fold 1.(t+1)); pass per-tenant keys so cache entries for the same weights
+    carry independent conductance noise.  ``engine``/``write_stats`` may be
+    supplied by a cache along with pre-programmed ``params``; programming runs
+    here only when the params are not yet programmed.
+    """
+
     mod: Any
     cfg: ModelConfig
     params: Any
@@ -30,29 +56,98 @@ class Server:
     max_len: int = 512
     write_stats: Any = None     # one-time analog programming cost (rram backend)
     engine: Optional[AnalogEngine] = None   # the programmed analog engine
+    key: Optional[jax.Array] = None         # programming + DAC noise key
 
     def __post_init__(self):
         self.rt = self.rt or Runtime()
+        if self.key is None:
+            self.key = jax.random.PRNGKey(7)
         if self.rt.rram is not None and self.rt.rram.enabled:
             self.engine = self.engine or AnalogEngine(crossbar_cfg(self.rt.rram))
-            self.params, self.write_stats = program_rram(
-                self.params, self.rt.rram, jax.random.PRNGKey(7),
-                engine=self.engine)
-        self._prefill = jax.jit(
-            lambda p, b: self.mod.prefill(p, b, self.cfg, self.rt, self.max_len))
-        self._decode = jax.jit(
-            lambda p, t, c: self.mod.decode_step(p, t, c, self.cfg, self.rt))
+            if not is_programmed(self.params):
+                self.params, self.write_stats = program_rram(
+                    self.params, self.rt.rram, self.key, engine=self.engine)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = {}     # jitted fused decode scans, keyed by n_tokens
+
+    def _rt_for(self, key: jax.Array) -> Runtime:
+        """A fresh Runtime carrying ``key`` (``key`` may be a tracer)."""
+        return dataclasses.replace(self.rt, key=key, _salt=0)
+
+    def _prefill_fn(self, params, batch) -> Tuple[jnp.ndarray, Any]:
+        """(first greedy token (B, 1) int32, filled caches)."""
+        rt = self._rt_for(jax.random.fold_in(self._noise_base(), 0))
+        logits, caches = self.mod.prefill(params, batch, self.cfg, rt,
+                                          self.max_len)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return tok, caches
+
+    def _noise_base(self) -> jax.Array:
+        """Runtime DAC-noise base key (distinct from the programming draws
+        consumed directly off ``self.key`` by ``program_rram``)."""
+        if self.rt.key is not None:
+            return self.rt.key
+        return jax.random.fold_in(self.key, 1)
+
+    def _decode_scan(self, n: int):
+        """The fused decode pipeline: ONE ``lax.scan`` over the token axis.
+
+        Returns the jitted ``(params, tok, caches) -> ((B, n) tokens, caches)``
+        callable; step ``t`` consumes its own fold of the noise base key, so
+        successive decode steps draw independent DAC noise (the seed's
+        per-token Python loop reused one trace -- and one key -- per step).
+        """
+        fn = self._decode.get(n)
+        if fn is not None:
+            return fn
+        base = self._noise_base()
+
+        def run(params, tok, caches):
+            def body(carry, t):
+                tok, caches = carry
+                rt = self._rt_for(jax.random.fold_in(base, t + 1))
+                logits, caches = self.mod.decode_step(params, tok, caches,
+                                                      self.cfg, rt)
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                tok = tok.astype(jnp.int32)
+                return (tok, caches), tok[:, 0]
+
+            (tok, caches), toks = jax.lax.scan(
+                body, (tok, caches), jnp.arange(n, dtype=jnp.int32))
+            return toks.T, caches           # (B, n)
+
+        fn = jax.jit(run)
+        self._decode[n] = fn
+        return fn
+
+    def prefill(self, batch: Dict) -> Tuple[jnp.ndarray, Any]:
+        """One jitted prefill dispatch: (first token (B, 1), caches)."""
+        return self._prefill(self.params, batch)
+
+    def decode_tokens(self, tok: jnp.ndarray, caches: Any,
+                      n: int) -> Tuple[jnp.ndarray, Any]:
+        """Greedy-decode ``n`` tokens after ``tok`` in ONE fused dispatch."""
+        return self._decode_scan(n)(self.params, tok, caches)
+
+    def decode_fn(self, n: int):
+        """The jitted fused decode callable, for jaxpr-level verification.
+
+        ``repro.analysis.pipelines`` traces this with ShapeDtypeStruct
+        placeholders and the DispatchCount pass asserts the whole ``n``-token
+        decode is a single device dispatch (see DESIGN.md section 10)."""
+        fused = self._decode_scan(n)
+        return lambda tok, caches: fused(self.params, tok, caches)
 
     def generate(self, batch: Dict, n_tokens: int) -> jnp.ndarray:
-        """Greedy continuation of ``batch['tokens']`` (B, T) -> (B, n_tokens)."""
-        logits, caches = self._prefill(self.params, batch)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out = [tok]
-        for _ in range(n_tokens - 1):
-            logits, caches = self._decode(self.params, tok, caches)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        return jnp.concatenate(out, axis=1)
+        """Greedy continuation of ``batch['tokens']`` (B, T) -> (B, n_tokens).
+
+        One prefill dispatch + ONE fused decode dispatch, any ``n_tokens``.
+        """
+        tok, caches = self.prefill(batch)
+        if n_tokens == 1:
+            return tok
+        toks, _ = self.decode_tokens(tok, caches, n_tokens - 1)
+        return jnp.concatenate([tok, toks], axis=1)
 
 
 def greedy_generate(mod, params, cfg: ModelConfig, batch: Dict,
