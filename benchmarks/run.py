@@ -23,9 +23,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (lm_step, pdhg_convergence, serving, solver_convergence,
-                   streamed_scaling, strong_scaling, table1_ec, weak_scaling,
-                   writeverify_sweep)
+    from . import (lm_step, pdhg_convergence, reliability, serving,
+                   solver_convergence, streamed_scaling, strong_scaling,
+                   table1_ec, weak_scaling, writeverify_sweep)
     modules = [
         ("table1_ec", table1_ec),
         ("writeverify_sweep", writeverify_sweep),
@@ -36,6 +36,7 @@ def main() -> None:
         ("streamed_scaling", streamed_scaling),
         ("lm_step", lm_step),
         ("serving", serving),
+        ("reliability", reliability),
     ]
     print("name,us_per_call,derived")
     for name, mod in modules:

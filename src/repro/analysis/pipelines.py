@@ -124,6 +124,24 @@ def _build_local(backend: str, transpose: bool) -> BuiltPipeline:
                         args=(_vec(n_in), _key_spec()))
 
 
+def _build_local_aged() -> BuiltPipeline:
+    """Local reference forward MVM with an :class:`AgeLedger` attached:
+    drift + replayable stuck-at faults applied to the image INSIDE the one
+    jitted execute (DESIGN.md section 12).  Pinned so aging can never
+    regress into extra dispatches or key consumptions vs the fresh path."""
+    from repro.engine import AnalogEngine
+    from repro.reliability.aging import attach_age
+    cfg = _small_cfg()
+    engine = AnalogEngine(cfg, backend="reference")
+    key = _key()
+    a = jax.random.normal(key, (100, 90), jnp.float32) / 10
+    A = engine.program(a, key)
+    attach_age(A)
+    A.age = A.age.advanced(1_000).elapsed(3600.0)   # a visibly aged image
+    return BuiltPipeline(fn=engine.mvm_fn(A),
+                        args=(_vec(a.shape[1]), _key_spec()))
+
+
 def _build_streamed(backend: str, transpose: bool) -> BuiltPipeline:
     from repro.engine import AnalogEngine
     cfg = _small_cfg()
@@ -247,6 +265,12 @@ def registered_pipelines() -> List[PipelineSpec]:
                 build=(lambda b=backend, t=transpose: _build_streamed(b, t)),
                 aval_budget=64 * small, max_producer_calls=3,
                 allow_baked=True))
+
+    specs.append(PipelineSpec(
+        name="local-aged-forward-reference",
+        placement="local", direction="forward", backend="reference",
+        build=_build_local_aged, aval_budget=64 * small,
+        allow_baked=True))
 
     for transpose, direction in ((False, "forward"), (True, "rmatvec")):
         specs.append(PipelineSpec(

@@ -1,7 +1,8 @@
 """MELISO+ core: RRAM device models, write-verify, two-tier error correction,
 virtualized multi-MCA crossbar simulation, and the distributed MVM engine."""
 
-from .devices import DEVICES, DeviceModel, effective_sigma, encode, get_device, quantize
+from .devices import (DEVICES, DeviceModel, drift_factor, effective_sigma,
+                      encode, get_device, quantize)
 from .write_verify import (
     WriteStats,
     adjustable_mat_write_and_verify,

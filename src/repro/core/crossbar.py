@@ -40,6 +40,7 @@ __all__ = [
     "write_cost",
     "matrix_write_cost",
     "input_write_cost",
+    "tile_write_cost",
     "block_keys",
     "capacity_elements",
     "local_block_keys",
@@ -189,6 +190,17 @@ def write_cost(
 def matrix_write_cost(m: int, n: int, cfg: CrossbarConfig) -> WriteStats:
     """One-time programming cost of the (m, n) conductance image."""
     return write_cost(m, n, cfg, include_inputs=False)
+
+
+def tile_write_cost(cfg: CrossbarConfig) -> WriteStats:
+    """Programming cost of ONE capacity block (cap_m x cap_n).
+
+    The unit the refresh controller budgets in
+    (:mod:`repro.reliability.refresh`): re-verifying ``k`` worst tiles costs
+    ``k`` of these against the full :func:`matrix_write_cost` of a complete
+    reprogram -- the amortization that makes tile-selective refresh win."""
+    cap_m, cap_n = cfg.geom.capacity
+    return matrix_write_cost(cap_m, cap_n, cfg)
 
 
 def input_write_cost(m: int, n: int, cfg: CrossbarConfig,

@@ -37,6 +37,7 @@ __all__ = [
     "DEVICES",
     "get_device",
     "effective_sigma",
+    "drift_factor",
     "quantize",
     "encode",
 ]
@@ -54,6 +55,15 @@ class DeviceModel:
     t_write: float         # s per row programming pulse (rows in a column are parallel)
     nl_pot: float          # potentiation nonlinearity coefficient
     nl_dep: float          # depression nonlinearity coefficient
+    # --- lifetime constants (repro.reliability; see DESIGN.md section 12) ---
+    # Log-time conductance drift G(t) = G0 * (1 + t / drift_t0)^-drift_nu
+    # (smooth at t = 0, the power law for t >> t0) and a stuck-at fault
+    # process: each cell independently fails with probability
+    # 1 - (1 - fault_rate)^N after N MVM read disturbs, sticking at G_off
+    # (zero) or at the G_on rail of its differential pair.
+    drift_nu: float = 0.0       # drift exponent (dimensionless)
+    drift_t0: float = 1.0       # drift reference time (s)
+    fault_rate: float = 0.0     # stuck-at faults per cell per MVM
 
     @property
     def sigma_floor(self) -> float:
@@ -69,22 +79,31 @@ class DeviceModel:
         return self.verify_gain / (1.0 + 0.35 * nl)
 
 
+# Lifetime constants: drift exponents span the published filamentary-oxide
+# range (~1e-3 for epitaxial devices up to ~2e-2 for the electrochemical
+# Ag-aSi system); stuck-at rates order the materials by endurance the same
+# way Table 1 orders them by precision (the high-energy EpiRAM cell is also
+# the most durable).
 DEVICES: Dict[str, DeviceModel] = {
     "epiram": DeviceModel(
         name="epiram", levels=64, sigma0=0.022, verify_gain=0.50,
         e_write=2.3e-8, t_write=6.8e-4, nl_pot=0.5, nl_dep=-0.5,
+        drift_nu=0.002, drift_t0=1.0, fault_rate=1e-9,
     ),
     "ag-si": DeviceModel(
         name="ag-si", levels=16, sigma0=0.23, verify_gain=0.60,
         e_write=8.6e-10, t_write=1.5e-2, nl_pot=2.4, nl_dep=-4.88,
+        drift_nu=0.02, drift_t0=1.0, fault_rate=2e-7,
     ),
     "alox-hfo2": DeviceModel(
         name="alox-hfo2", levels=8, sigma0=0.60, verify_gain=0.60,
         e_write=1.3e-8, t_write=2.1e-3, nl_pot=1.0, nl_dep=-1.0,
+        drift_nu=0.01, drift_t0=1.0, fault_rate=1e-7,
     ),
     "taox-hfox": DeviceModel(
         name="taox-hfox", levels=8, sigma0=0.49, verify_gain=0.60,
         e_write=1.2e-11, t_write=3.1e-6, nl_pot=0.8, nl_dep=-0.8,
+        drift_nu=0.015, drift_t0=1.0, fault_rate=5e-8,
     ),
 }
 
@@ -101,6 +120,23 @@ def effective_sigma(device: DeviceModel, k: jnp.ndarray | int) -> jnp.ndarray:
     k = jnp.asarray(k, jnp.float32)
     sigma = device.sigma0 * (1.0 - device.effective_gain) ** k
     return jnp.maximum(sigma, device.sigma_floor)
+
+
+def drift_factor(device: DeviceModel, seconds: jnp.ndarray | float) -> jnp.ndarray:
+    """Multiplicative conductance decay after ``seconds`` of retention.
+
+    ``(1 + t/t0)^-nu``: exactly 1 at t = 0 (a freshly verified image is
+    unchanged) and the paper-standard log-time power law ``(t/t0)^-nu`` for
+    ``t >> t0``.  Applied to the stored image by
+    :func:`repro.reliability.aging.aged_blocks`.
+    """
+    t = jnp.asarray(seconds, jnp.float32)
+    return (1.0 + t / device.drift_t0) ** (-device.drift_nu)
+
+
+def drift_factor_py(device: DeviceModel, seconds: float) -> float:
+    """Pure-Python twin of :func:`drift_factor` (host-side cost models)."""
+    return (1.0 + float(seconds) / device.drift_t0) ** (-device.drift_nu)
 
 
 def effective_sigma_py(device: DeviceModel, k: float) -> float:

@@ -27,6 +27,7 @@ __all__ = [
     "adjustable_write_and_verify",
     "adjustable_mat_write_and_verify",
     "adjustable_vec_write_and_verify",
+    "refresh_write_and_verify",
 ]
 
 
@@ -117,6 +118,29 @@ def adjustable_write_and_verify(
     stats = WriteStats(energy_j=e, latency_s=t, iterations=k,
                        final_delta=delta_of(at))
     return at, stats
+
+
+def refresh_write_and_verify(
+    a: jnp.ndarray,
+    key: jax.Array,
+    device: DeviceModel,
+    *,
+    k_iters: int,
+) -> Tuple[jnp.ndarray, WriteStats]:
+    """Re-program one aged capacity tile back to engine-grade precision.
+
+    The online-refresh variant of :func:`adjustable_write_and_verify` used by
+    :mod:`repro.reliability.refresh`: the verify loop targets the SAME
+    residual noise the engine's closed-form encode reaches after
+    ``cfg.k_iters`` passes (``eps = effective_sigma(device, k_iters)``), and
+    is capped at ``k_iters`` iterations -- so one tile's refresh never costs
+    more than that tile's share of a full reprogram, and the refreshed tile
+    is statistically indistinguishable from a freshly programmed one.
+    """
+    from .devices import effective_sigma_py
+    eps = effective_sigma_py(device, k_iters)
+    return adjustable_write_and_verify(a, key, device, eps=eps,
+                                       max_iters=int(k_iters))
 
 
 def adjustable_mat_write_and_verify(a, key, device, **kw):

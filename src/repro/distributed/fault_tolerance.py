@@ -113,6 +113,20 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The manifest.json of ``step`` (default: latest): step number,
+        leaf shapes/dtypes, the ``extra`` dict passed at save time, device
+        count and wall time -- the metadata a recovery loop inspects before
+        deciding what to restore."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
+
     def restore(self, target_tree: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Any:
         """Rebuild ``target_tree``-structured state from disk.  ``shardings``

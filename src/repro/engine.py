@@ -193,6 +193,11 @@ class AnalogMatrix:
     # cap_m, cap_n) block array sharded over the mesh (None for
     # resident=False handles, which re-encode inside every MVM's scan).
     mesh_sharded: bool = False
+    # device-lifetime state (repro.reliability): when an AgeLedger is
+    # attached (reliability.aging.attach_age), every execute applies the aged
+    # image -- drift + replayable stuck-at faults -- inside the SAME jitted
+    # dispatch, and host-side executes advance the per-block MVM count.
+    age: Optional["object"] = None
     calls: int = 0
     # cached dense padded layout for the pallas backend (built on first use).
     _padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
@@ -380,6 +385,22 @@ def _exec_reference(at_blocks, da_blocks, xb, key, *, cfg, m, n):
 def _exec_reference_t(at_blocks, da_blocks, yb, key, *, cfg, m, n):
     return crossbar.programmed_block_rmvm(
         at_blocks, da_blocks, yb, key, cfg, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n", "transpose"))
+def _exec_reference_aged(at_blocks, da_blocks, xb, key, age, *, cfg, m, n,
+                         transpose):
+    """Aged execute: ONE dispatch containing the aging transform AND the
+    corrected MVM.  The physical image drifts / latches
+    (:func:`repro.reliability.aging.aged_blocks`) while the stored tier-1
+    operand ``dA`` stays as measured at program time, so the corrected
+    product honestly degrades with age instead of silently self-correcting.
+    """
+    from repro.reliability.aging import aged_blocks
+    at_aged = aged_blocks(at_blocks, age, cfg.device)
+    run = crossbar.programmed_block_rmvm if transpose \
+        else crossbar.programmed_block_mvm
+    return run(at_aged, da_blocks, xb, key, cfg, m=m, n=n)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
@@ -838,7 +859,24 @@ class AnalogEngine:
                     if with_stats else None
         else:
             stats = None
-            if A.da_blocks is None:
+            if A.age is not None and A.da_blocks is not None \
+                    and self.backend == "reference":
+                # Aged execute: drift + stuck-at faults applied to the image
+                # inside the one jitted dispatch (DESIGN.md section 12).
+                p = _exec_reference_aged(A.at_blocks, A.da_blocks, xb, key,
+                                         A.age, cfg=self.cfg, m=m, n=n,
+                                         transpose=transpose)
+                # Host-dispatched executes age the image by one read disturb
+                # per call; traced executes (inside a solver's jit) advance
+                # the ledger explicitly via A.age = A.age.advanced(mvms).
+                if getattr(jax.core, "trace_state_clean", lambda: True)():
+                    A.age = A.age.advanced(1)
+            elif A.age is not None:
+                raise ValueError(
+                    "an AgeLedger is attached but this execution path cannot "
+                    "apply it: aged execution needs execution='local', "
+                    "backend='reference' and resident at/da blocks")
+            elif A.da_blocks is None:
                 # Streamed handle: dA is not resident; re-derive per block.
                 p = self._exec_streamed(A, xb, key, transpose)
             elif self.backend == "pallas":

@@ -1,0 +1,32 @@
+"""Device-lifetime reliability: aging, health probes, online refresh, and
+fault-tolerant solves.
+
+The paper's write-and-verify loop makes a FRESH image accurate; this package
+models what happens to that image over a device lifetime and closes the loop:
+
+  * :mod:`~repro.reliability.aging` -- conductance drift + replayable
+    stuck-at faults, applied inside the engine's single jitted dispatch via
+    an :class:`~repro.reliability.aging.AgeLedger` attached to the handle;
+  * :mod:`~repro.reliability.probes` -- per-tile health estimation from one
+    batched corrected MVM against known test vectors;
+  * :mod:`~repro.reliability.refresh` -- tile-selective re-program of the
+    worst tiles, amortized against a full reprogram;
+  * :mod:`~repro.reliability.ft_solve` -- segmented CG/PDHG with digital
+    divergence detection and checkpoint/restore recovery.
+
+See DESIGN.md section 12 and docs/reliability.md for the end-to-end story.
+"""
+from .aging import (AgeLedger, aged_blocks, attach_age, fault_probability,
+                    predicted_residual)
+from .ft_solve import FaultEvent, ft_cg, ft_pdhg
+from .probes import ProbeReport, probe_tile_scores, probe_vectors
+from .refresh import (RefreshPolicy, RefreshReport, refresh_tiles,
+                      select_tiles)
+
+__all__ = [
+    "AgeLedger", "aged_blocks", "attach_age", "fault_probability",
+    "predicted_residual",
+    "ProbeReport", "probe_tile_scores", "probe_vectors",
+    "RefreshPolicy", "RefreshReport", "refresh_tiles", "select_tiles",
+    "FaultEvent", "ft_cg", "ft_pdhg",
+]

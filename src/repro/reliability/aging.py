@@ -1,0 +1,174 @@
+"""Device aging: conductance drift + stuck-at faults on a programmed image.
+
+Everything upstream of this package assumes a freshly verified image; this
+module models what the image becomes after ``N`` MVM read disturbs and ``t``
+seconds of retention (PAPERS.md: Bocquet et al. embrace exactly these RRAM
+failure modes; Ensan et al. show the stuck-at countermeasures):
+
+  * **Drift** -- every stored conductance decays by the smooth log-time power
+    law ``G(t) = G0 * (1 + t/t0)^-nu`` (:func:`repro.core.devices.drift_factor`).
+    The tier-1 correction operand ``dA`` was measured at *program* time, so
+    the corrected MVM's error grows with age -- the physically honest failure
+    mode, not an artificial noise injection.
+  * **Stuck-at faults** -- each cell independently latches with probability
+    ``1 - (1 - fault_rate)^N`` after ``N`` MVMs, sticking at G_off (zero) or
+    at the G_on rail of its differential pair.  The per-cell uniform draw is
+    a pure function of the handle's base key (``fold_in`` salted, one key per
+    capacity block, re-folded by the block's refresh count), so the faulted
+    set is *replayable*: re-running a trace reproduces the same failures, and
+    the set only grows with ``N`` (a cell faulted at age 100 is still faulted
+    at age 200).
+
+State lives in an :class:`AgeLedger` attached to an
+:class:`~repro.engine.AnalogMatrix` (``attach_age``): per-capacity-block MVM
+counts, retention seconds and refresh counts, plus the per-block fault-process
+keys.  :func:`aged_blocks` is the pure transform the engine fuses INTO its
+execute dispatch (one jit -- aging adds zero dispatches; the invariant gate
+pins this via the ``local-aged-forward-reference`` pipeline).  See DESIGN.md
+section 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar
+from repro.core.devices import (DeviceModel, drift_factor, drift_factor_py,
+                                effective_sigma_py)
+
+__all__ = ["AgeLedger", "attach_age", "aged_blocks", "fault_probability",
+           "predicted_residual", "FAULT_SALT"]
+
+#: fold_in salt separating the fault-process key stream from the programming
+#: (k_a) and input-DAC (k_x) streams derived from the same base key.
+FAULT_SALT = 0x0FA17
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AgeLedger:
+    """Per-capacity-block age state of one programmed handle (a pytree).
+
+    All fields are (mb, nb)-shaped except ``fault_keys`` (one PRNG key per
+    block).  Functional updates only -- ``advanced``/``elapsed``/``reset``
+    return new ledgers -- so a ledger checkpoints and restores through
+    :class:`~repro.distributed.fault_tolerance.CheckpointManager` like any
+    other pytree.
+    """
+
+    mvms: jnp.ndarray           # MVM read disturbs per block (float32)
+    seconds: jnp.ndarray        # retention time since last (re)program (s)
+    refresh_count: jnp.ndarray  # completed per-block refreshes (int32)
+    fault_keys: jax.Array       # per-block fault-process keys, (mb, nb, ...)
+
+    @classmethod
+    def fresh(cls, base_key: jax.Array, mb: int, nb: int) -> "AgeLedger":
+        """Age zero: the state of an image the instant verify completes."""
+        fault_base = jax.random.fold_in(base_key, FAULT_SALT)
+        return cls(
+            mvms=jnp.zeros((mb, nb), jnp.float32),
+            seconds=jnp.zeros((mb, nb), jnp.float32),
+            refresh_count=jnp.zeros((mb, nb), jnp.int32),
+            fault_keys=crossbar.block_keys(fault_base, mb, nb))
+
+    @property
+    def grid(self):
+        return self.mvms.shape
+
+    def advanced(self, n_mvms: int = 1) -> "AgeLedger":
+        """``n_mvms`` more read disturbs on every block."""
+        return dataclasses.replace(self, mvms=self.mvms + float(n_mvms))
+
+    def elapsed(self, dt_s: float) -> "AgeLedger":
+        """``dt_s`` more seconds of retention on every block."""
+        return dataclasses.replace(self, seconds=self.seconds + float(dt_s))
+
+    def reset(self, mask: jnp.ndarray) -> "AgeLedger":
+        """Per-block refresh: zero the age where ``mask`` (mb, nb) is True
+        and bump the refresh counter -- the next fault draws for those blocks
+        come from a fresh fold of their fault keys."""
+        mask = jnp.asarray(mask, bool)
+        return AgeLedger(
+            mvms=jnp.where(mask, 0.0, self.mvms),
+            seconds=jnp.where(mask, 0.0, self.seconds),
+            refresh_count=self.refresh_count + mask.astype(jnp.int32),
+            fault_keys=self.fault_keys)
+
+
+def attach_age(A) -> "AgeLedger":
+    """Attach a fresh :class:`AgeLedger` to an AnalogMatrix handle.
+
+    Local handles only (the aged execute needs the resident block layout);
+    returns the ledger it set.  Distributed fault experiments mutate
+    ``at_dense`` host-side between solve segments instead (see
+    :mod:`repro.reliability.ft_solve`).
+    """
+    if A.at_blocks is None or A.da_blocks is None or A.mesh_sharded:
+        raise ValueError(
+            "attach_age needs a local handle with resident at/da blocks; "
+            "streamed and distributed handles age via host-side injection")
+    mb, nb = A.at_blocks.shape[:2]
+    A.age = AgeLedger.fresh(A.base_key, mb, nb)
+    return A.age
+
+
+def fault_probability(device: DeviceModel, mvms) -> jnp.ndarray:
+    """P(cell stuck) after ``mvms`` read disturbs: ``1 - (1 - rate)^N``.
+
+    Computed as ``-expm1(N * log1p(-rate))``: the naive form underflows to
+    exactly zero in float32 for realistic rates (``1 - 1e-9`` rounds to
+    ``1.0``, float32 eps is ~1.2e-7), silently disabling the fault process
+    for the low-rate devices."""
+    n = jnp.asarray(mvms, jnp.float32)
+    return -jnp.expm1(n * jnp.log1p(jnp.float32(-device.fault_rate)))
+
+
+def aged_blocks(at_blocks: jnp.ndarray, age: AgeLedger,
+                device: DeviceModel) -> jnp.ndarray:
+    """The physical conductance image after aging: pure, jit-fusable.
+
+    Applies the per-block drift factor to the stored image, then overwrites
+    stuck cells: cell ``(i, j, r, c)`` is faulted iff its uniform draw (a
+    function of the block's fault key and refresh count only) falls below
+    ``fault_probability(device, mvms[i, j])`` -- deterministic, replayable,
+    and monotone in the MVM count.  A second uniform picks the latch: G_off
+    (zero conductance) or the G_on rail ``sign(w) * max|block|`` of the
+    differential pair.  ``fault_rate == 0`` devices skip the fault pass
+    entirely (a static Python branch -- no dead ops in the jaxpr).
+    """
+    decay = drift_factor(device, age.seconds)
+    drifted = at_blocks * decay[:, :, None, None]
+    if device.fault_rate <= 0.0:
+        return drifted
+
+    def per_block(at_blk, dr_blk, n, rc, k):
+        u = jax.random.uniform(jax.random.fold_in(k, rc),
+                               (2,) + at_blk.shape, jnp.float32)
+        stuck = u[0] < fault_probability(device, n)
+        scale = jnp.max(jnp.abs(at_blk))
+        rail = jnp.where(u[1] < 0.5, 0.0, jnp.sign(at_blk) * scale)
+        return jnp.where(stuck, rail, dr_blk)
+
+    return jax.vmap(jax.vmap(per_block))(
+        at_blocks, drifted, age.mvms, age.refresh_count, age.fault_keys)
+
+
+def predicted_residual(device: DeviceModel, *, k_iters: int, seconds: float,
+                       mvms: float, n: int) -> float:
+    """Analytic health proxy: predicted relative MVM error at this age.
+
+    Pure host-side math (no array reads -- the serving scheduler calls this
+    per batch): the programming noise floor after ``k_iters`` verify passes,
+    the uncorrected drift mismatch ``1 - (1 + t/t0)^-nu``, and the expected
+    stuck-cell contribution ``sqrt(P_fault * n)`` (each of the ~``P * n``
+    faulted cells on a row contributes O(1) relative error), combined in
+    quadrature.  Monotone in both age axes; exact at age zero
+    (== ``effective_sigma``)."""
+    sigma_k = effective_sigma_py(device, k_iters)
+    drift = 1.0 - drift_factor_py(device, seconds)
+    p = -math.expm1(float(mvms) * math.log1p(-device.fault_rate)) \
+        if device.fault_rate > 0.0 else 0.0
+    return math.sqrt(sigma_k ** 2 + drift ** 2 + p * float(n))

@@ -1,0 +1,353 @@
+"""Fault-tolerant solves: segmented CG/PDHG with checkpoint/restore recovery.
+
+A device fault mid-solve (a stuck-at cell flipping during iteration k)
+poisons the Krylov recurrence: CG's residual is maintained *recursively*, so
+after the operator changes the recurrence no longer tracks ``b - A x`` and
+the solve either diverges or "converges" to the wrong answer.  The wrapper
+here makes solves survive that:
+
+  * the solve runs in SEGMENTS: for CG each segment is one iterative-
+    refinement step (digital residual ``r = b - A x``, analog inner CG solve
+    of ``A d = r`` capped at ``segment`` iterations, ``x += d``), which both
+    measures the TRUE residual against the healthy reference captured at
+    entry and keeps converging *below the analog noise floor* where a bare
+    warm-started CG plateaus (see :func:`repro.solvers.refinement.refine`);
+  * NaN or a residual above ``spike_factor`` x the best seen declares a
+    fault, the iterate is rolled back to the last good checkpoint
+    (:class:`~repro.distributed.fault_tolerance.CheckpointManager` -- the
+    same atomic manifest+npz store distributed training uses), the
+    ``on_fault`` callback gets a chance to repair the operator (re-program
+    the damaged tiles, swap in a spare array), and the segment re-runs;
+  * inside each segment the jitted core additionally early-exits on its own
+    NaN/spike detector (``divergence=`` in :func:`repro.solvers.cg` /
+    ``pdhg``), so a faulted segment costs at most a few MVMs, not
+    ``segment`` of them.
+
+Each segment re-enters the solver eagerly, so operator state mutated by
+``on_fault`` / ``segment_hook`` (host-side ``at_dense`` / ``at_blocks``
+writes, tile refreshes) is picked up by the next segment -- exactly the
+recovery loop the serving and benchmark harnesses drive.  See DESIGN.md
+section 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.fault_tolerance import CheckpointManager
+from repro.solvers.base import SolveLedger, SolveResult, as_operator
+from repro.solvers.krylov import cg
+from repro.solvers.pdhg import pdhg
+
+__all__ = ["FaultEvent", "ft_cg", "ft_pdhg"]
+
+_TINY = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One detected divergence: which segment, how it showed, where we went."""
+
+    segment: int        # segment index that tripped the detector
+    kind: str           # "nan" | "residual-spike"
+    residual: float     # the offending digital residual
+    restored_step: int  # checkpoint step rolled back to
+
+
+def _col_rel(a_ref: np.ndarray, x, b: np.ndarray, bn: np.ndarray
+             ) -> np.ndarray:
+    """Per-column digital relative residual ||b - A_ref x|| / ||b||."""
+    r = b - a_ref @ np.asarray(jax.device_get(x))
+    return np.sqrt(np.sum(r * r, axis=0)) / bn
+
+
+def ft_cg(
+    A,
+    b: jnp.ndarray,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 400,
+    segment: int = 30,
+    inner_tol: float = 1e-2,
+    manager: Optional[CheckpointManager] = None,
+    key: Optional[jax.Array] = None,
+    spike_factor: float = 10.0,
+    max_restores: int = 8,
+    on_fault: Optional[Callable[[FaultEvent, object], None]] = None,
+    segment_hook: Optional[Callable[[int, object], None]] = None,
+    backend: Optional[str] = None,
+) -> SolveResult:
+    """Fault-tolerant CG for SPD ``A`` (any :func:`as_operator` input with a
+    ``dense()``; analog handles across all execution modes qualify).
+
+    ``segment_hook(seg, A)`` runs before every segment (the benchmark's fault
+    injector); ``on_fault(event, A)`` runs after every detected fault, before
+    the retry -- mutate the handle there to repair it.  On a fault the
+    iterate is reloaded from the last good checkpoint on disk rather than
+    from memory: after a device fault (or a preemption mid-repair) the
+    in-memory state is exactly what is no longer trusted.  ``manager``
+    defaults to a fresh temp-dir :class:`CheckpointManager`.  Returns a
+    :class:`SolveResult` whose ``residuals`` hold one DIGITAL relative
+    residual per accepted segment (``iterations`` counts accepted segments,
+    like GMRES cycles), and whose ``restores`` counts checkpoint rollbacks.
+    """
+    op = as_operator(A)
+    if op.dense is None:
+        raise ValueError("ft_cg needs an operator with dense() for the "
+                         "digital outer residual check")
+    # Healthy reference, captured at entry: faults injected DURING the solve
+    # are judged against the matrix the caller asked to solve with.
+    a_ref = np.asarray(jax.device_get(op.dense()), np.float32)
+    squeeze = b.ndim == 1
+    bb = np.asarray(jax.device_get(b), np.float32)
+    bb = bb[:, None] if squeeze else bb
+    bn = np.maximum(np.sqrt(np.sum(bb * bb, axis=0)), _TINY)
+    key = jax.random.PRNGKey(0) if key is None else key
+    if manager is None:
+        manager = CheckpointManager(tempfile.mkdtemp(prefix="ft_cg_"))
+
+    x = jnp.zeros((op.shape[1], bb.shape[1]), jnp.float32)
+    rel = _col_rel(a_ref, x, bb, bn)
+    entry_rel = float(np.max(rel))
+    manager.save(0, {"x": x}, blocking=True,
+                 extra={"segment": -1, "rel": entry_rel})
+    good_step = 0
+    seg = 0
+    restores = 0
+    stalls = 0
+    mvms = 0
+    total_iters = 0
+    seg_hist: List[np.ndarray] = []
+    events: List[FaultEvent] = []
+
+    while total_iters < maxiter and float(np.max(rel)) > tol:
+        if segment_hook is not None:
+            segment_hook(seg, A)
+        # One refinement step: digital residual, analog inner solve of
+        # A d = r (crude -- its achieved residual is the outer contraction
+        # rate), tentative update.  Faults surface as a NaN/spiking TRUE
+        # residual of the tentative iterate.
+        r = bb - a_ref @ np.asarray(jax.device_get(x))
+        res = cg(A, jnp.asarray(r), tol=inner_tol, maxiter=segment,
+                 key=jax.random.fold_in(key, 101 + seg), backend=backend,
+                 divergence=spike_factor)
+        mvms += res.ledger.mvms
+        if getattr(A, "age", None) is not None:
+            # Traced executes don't advance the ledger; bill the segment.
+            A.age = A.age.advanced(res.ledger.mvms)
+        x_try = x + res.x
+        rel_try = _col_rel(a_ref, x_try, bb, bn)
+        worst = float(np.max(rel_try))
+        # Three fault signatures, all judged against the healthy reference:
+        #   * the inner core tripped its own NaN/spike detector (exited
+        #     early, not converged);
+        #   * anything non-finite;
+        #   * the correction made the residual equation WORSE (digital
+        #     ||r - A_ref d|| / ||r|| > 1): a healthy inner solve always
+        #     contracts it to roughly its achieved tolerance.
+        d_rel = float(np.max(_col_rel(
+            a_ref, res.x, r, np.maximum(np.sqrt(np.sum(r * r, axis=0)),
+                                        _TINY))))
+        early_div = (not res.converged) and int(res.iterations) < segment
+        nan_like = not (np.isfinite(worst) and np.isfinite(d_rel))
+        if early_div or nan_like or d_rel > 1.0:
+            event = FaultEvent(
+                segment=seg,
+                kind="nan" if nan_like else "residual-spike",
+                residual=d_rel if np.isfinite(d_rel) else worst,
+                restored_step=good_step)
+            events.append(event)
+            restores += 1
+            x = manager.restore({"x": x}, step=good_step)["x"]
+            if on_fault is not None:
+                on_fault(event, A)
+            seg += 1
+            if restores > max_restores:
+                break
+            continue
+        if worst >= float(np.max(rel)):
+            stalls += 1
+            if stalls >= 2:
+                break  # refinement floor: two straight non-contracting steps
+            seg += 1
+            continue
+        stalls = 0
+        x = x_try
+        rel = rel_try
+        seg_hist.append(rel_try)
+        total_iters += max(int(res.iterations), 1)
+        good_step += 1
+        manager.save(good_step, {"x": x}, blocking=True,
+                     extra={"segment": seg, "rel": worst})
+        seg += 1
+
+    hist = jnp.asarray(np.stack(seg_hist), jnp.float32) if seg_hist \
+        else jnp.full((1, bb.shape[1]), jnp.nan, jnp.float32)
+    batch = bb.shape[1]
+    result = SolveResult(
+        x=x[:, 0] if squeeze else x,
+        residuals=hist[:, 0] if squeeze else hist,
+        iterations=len(seg_hist),
+        converged=bool(float(np.max(rel)) <= tol),
+        ledger=SolveLedger(write_stats=op.write_stats,
+                           input_stats=op.input_stats(batch),
+                           mvms=int(mvms)),
+        solver="ft-cg",
+        initial_residual=entry_rel,
+        restores=restores,
+    )
+    result.fault_events = tuple(events)
+    return result
+
+
+def ft_pdhg(
+    A,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    tol: float = 1e-4,
+    maxiter: int = 2000,
+    segment: int = 200,
+    manager: Optional[CheckpointManager] = None,
+    key: Optional[jax.Array] = None,
+    spike_factor: float = 10.0,
+    max_restores: int = 8,
+    on_fault: Optional[Callable[[FaultEvent, object], None]] = None,
+    segment_hook: Optional[Callable[[int, object], None]] = None,
+    eta: float = 0.9,
+    power_iters: int = 16,
+) -> SolveResult:
+    """Fault-tolerant PDHG for ``min c'x s.t. Ax = b, x >= 0``.
+
+    The segmented analogue of :func:`ft_cg` for linear programs: checkpoints
+    carry the primal-dual pair ``(x, y)``, and the outer health check is the
+    DIGITAL KKT residual (primal feasibility against the entry-time healthy
+    ``A``; max of primal/dual infeasibility and the relative gap).
+    """
+    op = as_operator(A)
+    if op.dense is None or op.rmatvec is None:
+        raise ValueError("ft_pdhg needs an operator with dense() and rmatvec")
+    a_ref = np.asarray(jax.device_get(op.dense()), np.float32)
+    squeeze = b.ndim == 1
+    bb = np.asarray(jax.device_get(b), np.float32)
+    cc = np.asarray(jax.device_get(c), np.float32)
+    bb = bb[:, None] if squeeze else bb
+    cc = cc[:, None] if squeeze else cc
+    bn = 1.0 + np.sqrt(np.sum(bb * bb, axis=0))
+    cn = 1.0 + np.sqrt(np.sum(cc * cc, axis=0))
+    key = jax.random.PRNGKey(0) if key is None else key
+    if manager is None:
+        manager = CheckpointManager(tempfile.mkdtemp(prefix="ft_pdhg_"))
+
+    def kkt(x, y) -> np.ndarray:
+        xh = np.asarray(jax.device_get(x))
+        yh = np.asarray(jax.device_get(y))
+        primal = np.sqrt(np.sum((a_ref @ xh - bb) ** 2, axis=0)) / bn
+        slack = np.maximum(-(cc + a_ref.T @ yh), 0.0)
+        dual = np.sqrt(np.sum(slack * slack, axis=0)) / cn
+        pobj = np.sum(cc * xh, axis=0)
+        dobj = -np.sum(bb * yh, axis=0)
+        gap = np.abs(pobj - dobj) / (1.0 + np.abs(pobj) + np.abs(dobj))
+        return np.maximum(np.maximum(primal, dual), gap)
+
+    x = jnp.zeros((op.shape[1], bb.shape[1]), jnp.float32)
+    y = jnp.zeros((op.shape[0], bb.shape[1]), jnp.float32)
+    rel = kkt(x, y)
+    entry_rel = float(np.max(rel))
+    best = max(entry_rel, tol)
+    manager.save(0, {"x": x, "y": y}, blocking=True,
+                 extra={"segment": -1, "rel": entry_rel})
+    good_step = 0
+    seg = 0
+    restores = 0
+    stalls = 0
+    mvms = mvms_t = mvms_single = 0
+    total_iters = 0
+    seg_hist: List[np.ndarray] = []
+    events: List[FaultEvent] = []
+
+    while total_iters < maxiter and float(np.max(rel)) > tol:
+        if segment_hook is not None:
+            segment_hook(seg, A)
+        # PDHG's KKT residual is non-monotone in its transient, so the
+        # in-core spike margin is widened -- the in-core detector's job here
+        # is the immediate NaN exit; spike detection is the wrapper's.
+        res = pdhg(A, jnp.asarray(bb), jnp.asarray(cc), tol=tol,
+                   maxiter=segment, x0=x, y0=y,
+                   key=jax.random.fold_in(key, 211 + seg), eta=eta,
+                   power_iters=power_iters,
+                   divergence=max(spike_factor, 50.0))
+        mvms += res.ledger.mvms
+        mvms_t += res.ledger.mvms_t
+        mvms_single += res.ledger.mvms_single
+        if getattr(A, "age", None) is not None:
+            A.age = A.age.advanced(res.ledger.mvms + res.ledger.mvms_t)
+        rel_try = kkt(res.x, res.dual)
+        worst = float(np.max(rel_try))
+        # Fault signatures: the inner core's own NaN/spike early exit,
+        # anything non-finite, or a digital KKT residual spiking above
+        # spike_factor x the best accepted value.
+        early_div = (not res.converged) and int(res.iterations) < segment
+        nan_like = not np.isfinite(worst)
+        if early_div or nan_like or worst > spike_factor * best:
+            event = FaultEvent(
+                segment=seg,
+                kind="nan" if nan_like else "residual-spike",
+                residual=worst, restored_step=good_step)
+            events.append(event)
+            restores += 1
+            state = manager.restore({"x": x, "y": y}, step=good_step)
+            x, y = state["x"], state["y"]
+            if on_fault is not None:
+                on_fault(event, A)
+            seg += 1
+            if restores > max_restores:
+                break
+            continue
+        if worst >= float(np.max(rel)):
+            stalls += 1
+            if stalls >= 2:
+                break  # noise floor: two straight non-contracting segments
+            seg += 1
+            continue
+        stalls = 0
+        x, y = res.x, res.dual
+        rel = rel_try
+        best = min(best, max(worst, tol))
+        seg_hist.append(rel_try)
+        total_iters += max(int(res.iterations), 1)
+        good_step += 1
+        manager.save(good_step, {"x": x, "y": y}, blocking=True,
+                     extra={"segment": seg, "rel": worst})
+        seg += 1
+
+    hist = jnp.asarray(np.stack(seg_hist), jnp.float32) if seg_hist \
+        else jnp.full((1, bb.shape[1]), jnp.nan, jnp.float32)
+    batch = bb.shape[1]
+    stats_t = op.input_stats_t or op.input_stats
+    result = SolveResult(
+        x=x[:, 0] if squeeze else x,
+        residuals=hist[:, 0] if squeeze else hist,
+        iterations=len(seg_hist),
+        converged=bool(float(np.max(rel)) <= tol),
+        ledger=SolveLedger(write_stats=op.write_stats,
+                           input_stats=op.input_stats(batch),
+                           mvms=int(mvms),
+                           input_stats_single=op.input_stats(1),
+                           mvms_single=int(mvms_single),
+                           input_stats_t=stats_t(batch),
+                           mvms_t=int(mvms_t),
+                           input_stats_single_t=stats_t(1),
+                           mvms_single_t=int(mvms_single)),
+        solver="ft-pdhg",
+        initial_residual=entry_rel,
+        restores=restores,
+        dual=y[:, 0] if squeeze else y,
+    )
+    result.fault_events = tuple(events)
+    return result

@@ -1,0 +1,90 @@
+"""Health probes: estimate per-tile degradation without reading the array.
+
+A real deployment cannot read conductances back cheaply -- but it CAN run a
+few corrected MVMs against *known* test vectors and compare with the digital
+expectation.  One batched probe call localizes damage to capacity tiles:
+probe column ``j`` is a fixed cosine ramp supported ONLY on column block
+``j``, so output rows of row block ``i`` respond only to tile ``(i, j)`` --
+the single (n, nb)-batched corrected MVM therefore yields a full (mb, nb)
+per-tile residual map.  Probe executions are real executions: they consume
+the engine's key schedule, are billed as input writes, and age the image
+(``nb`` read disturbs -- the ledger advances like any other batch).
+
+The scores feed the refresh controller (:mod:`repro.reliability.refresh`),
+the SNIPPETS.md snippet-2 write-back pattern: probe, rank, re-verify only the
+worst tiles.  See DESIGN.md section 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.write_verify import WriteStats
+
+__all__ = ["ProbeReport", "probe_vectors", "probe_tile_scores"]
+
+_TINY = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeReport:
+    """One probe pass: the (mb, nb) per-tile residual map + what it cost."""
+
+    scores: jnp.ndarray        # (mb, nb) relative per-tile residuals
+    input_stats: WriteStats    # DAC/EC input-write cost of the probe batch
+    n_probes: int              # probe columns executed (== nb)
+
+    @property
+    def worst(self) -> float:
+        return float(jnp.max(self.scores))
+
+
+def probe_vectors(n: int, nb: int, cap_n: int) -> jnp.ndarray:
+    """The (n, nb) deterministic probe panel: column ``j`` is a unit-norm
+    cosine ramp on column block ``j``, zero elsewhere.  A fixed, known
+    pattern (not random): the digital expectation is computed once and the
+    same probes are reusable across the device lifetime."""
+    cols = []
+    for j in range(nb):
+        lo, hi = j * cap_n, min((j + 1) * cap_n, n)
+        ramp = jnp.cos(jnp.pi * (jnp.arange(hi - lo) + 0.5) / (hi - lo))
+        v = jnp.zeros((n,), jnp.float32).at[lo:hi].set(ramp)
+        cols.append(v / jnp.maximum(jnp.linalg.norm(v), _TINY))
+    return jnp.stack(cols, axis=1)
+
+
+def probe_tile_scores(A, *, key: jax.Array | None = None) -> ProbeReport:
+    """Run the probe batch against handle ``A``; returns per-tile scores.
+
+    ``scores[i, j]`` is the relative l2 error of row block ``i`` under probe
+    ``j`` -- the health of capacity tile ``(i, j)``.  The digital reference
+    is ``A.dense()`` (the source matrix: tier-1 stores it exactly as
+    ``A_tilde + dA``, unaffected by aging).  The probe MVM goes through the
+    ordinary engine execute, so an attached :class:`~.aging.AgeLedger`
+    both *shapes* the measurement (the aged image answers) and *advances*
+    (``nb`` read disturbs billed to every block).
+    """
+    engine = A.engine
+    m, n = A.shape
+    mb, nb = A._grid()
+    cap_m, _cap_n = engine.cfg.geom.capacity
+    x = probe_vectors(n, nb, engine.cfg.geom.capacity[1])
+
+    y = engine.mvm(A, x) if key is None else engine.mvm(A, x, key=key)
+    y_ref = A.dense() @ x
+    if A.age is not None:
+        # the engine billed 1 read disturb for the batched call; a batch of
+        # nb probe columns physically reads the array nb times.
+        A.age = A.age.advanced(nb - 1)
+
+    pad = mb * cap_m - m
+    y_pad = jnp.pad(y, ((0, pad), (0, 0))).reshape(mb, cap_m, nb)
+    r_pad = jnp.pad(y_ref, ((0, pad), (0, 0))).reshape(mb, cap_m, nb)
+    err = jnp.sqrt(jnp.sum((y_pad - r_pad) ** 2, axis=1))
+    ref = jnp.sqrt(jnp.sum(r_pad ** 2, axis=1))
+    scores = err / jnp.maximum(ref, _TINY)
+    return ProbeReport(scores=scores,
+                       input_stats=engine.input_write_stats(A, batch=nb),
+                       n_probes=nb)

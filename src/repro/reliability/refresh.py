@@ -1,0 +1,121 @@
+"""Online refresh: re-program only the tiles the probes flag as degraded.
+
+The controller follows the SNIPPETS.md snippet-2 write-back pattern: rank
+tiles by probe score, re-run closed-loop write-and-verify
+(:func:`~repro.core.write_verify.refresh_write_and_verify`) on the worst few,
+and bill the *actual* :class:`~repro.core.write_verify.WriteStats` against
+the cost of a full reprogram.  A refresh of ``k`` tiles costs at most
+``k * tile_write_cost(cfg)``; amortization holds whenever ``k < mb * nb``,
+which is exactly the regime stuck-at faults create (damage is sparse and
+tile-local, drift is slow and global).  See DESIGN.md section 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar
+from repro.core.write_verify import WriteStats, refresh_write_and_verify
+
+__all__ = ["RefreshPolicy", "RefreshReport", "refresh_tiles", "select_tiles",
+           "REFRESH_SALT"]
+
+# Distinct key stream for refresh re-programming -- never collides with the
+# program-time block keys, DAC draws, or the aging FAULT_SALT stream.
+REFRESH_SALT = 0xF5E5
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPolicy:
+    """When and how much to refresh.
+
+    ``threshold``: probe score above which a tile is a refresh candidate
+    (relative per-tile residual; compare against the engine's fresh-image
+    ``effective_sigma``).  ``max_tiles``: cap on tiles re-programmed per
+    pass (None = all candidates) -- the knob trading refresh stall/energy
+    against residual accuracy.
+    """
+
+    threshold: float = 0.05
+    max_tiles: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RefreshReport:
+    """What one refresh pass did and what it cost."""
+
+    tiles: Tuple[Tuple[int, int], ...]   # (i, j) tiles re-programmed, worst first
+    write_stats: WriteStats              # actual verify-loop cost (summed)
+    full_rewrite_stats: WriteStats       # cost of reprogramming the whole image
+    scores_before: np.ndarray            # the (mb, nb) probe map acted on
+
+    @property
+    def energy_saving(self) -> float:
+        """Fraction of a full-reprogram's energy avoided by tile selection."""
+        full = float(self.full_rewrite_stats.energy_j)
+        return 1.0 - float(self.write_stats.energy_j) / full if full else 0.0
+
+
+def select_tiles(scores, policy: RefreshPolicy) -> Tuple[Tuple[int, int], ...]:
+    """Candidate tiles, worst score first, thresholded and capped."""
+    s = np.asarray(jax.device_get(scores))
+    idx = np.argwhere(s > policy.threshold)
+    ranked = sorted(map(tuple, idx), key=lambda ij: -s[ij])
+    if policy.max_tiles is not None:
+        ranked = ranked[: policy.max_tiles]
+    return tuple((int(i), int(j)) for i, j in ranked)
+
+
+def refresh_tiles(A, scores, policy: RefreshPolicy = RefreshPolicy(),
+                  *, key: Optional[jax.Array] = None) -> RefreshReport:
+    """Re-program the worst tiles of handle ``A`` in place.
+
+    For each selected tile the *source* sub-matrix ``at + da`` (tier-1 keeps
+    it exactly) is re-written through the closed verify loop, the handle's
+    ``at/da`` blocks are updated with the new image and correction, derived
+    execution caches are dropped (:meth:`AnalogMatrix.release`), and the
+    :class:`~repro.reliability.aging.AgeLedger` is reset on those tiles --
+    bumping ``refresh_count`` so the replayable fault process redraws.
+
+    Refresh keys live in their own stream:
+    ``fold_in(fold_in(fold_in(base_key, REFRESH_SALT), i*nb + j), refresh_count)``.
+    """
+    if A.at_blocks is None or A.da_blocks is None:
+        raise ValueError(
+            "refresh_tiles needs resident at/da blocks (execution='local'); "
+            "streamed and producer handles re-materialize instead of refreshing")
+    cfg = A.engine.cfg
+    mb, nb = A._grid()
+    tiles = select_tiles(scores, policy)
+    full = crossbar.matrix_write_cost(*A.shape, cfg)
+    if not tiles:
+        return RefreshReport(tiles=(), write_stats=WriteStats.zero(),
+                             full_rewrite_stats=full,
+                             scores_before=np.asarray(jax.device_get(scores)))
+
+    base = A.base_key if key is None else key
+    stream = jax.random.fold_in(base, REFRESH_SALT)
+    at, da = A.at_blocks, A.da_blocks
+    total = WriteStats.zero()
+    mask = np.zeros((mb, nb), bool)
+    for (i, j) in tiles:
+        src = at[i, j] + da[i, j]
+        rc = int(A.age.refresh_count[i, j]) if A.age is not None else 0
+        k = jax.random.fold_in(jax.random.fold_in(stream, i * nb + j), rc)
+        new_at, st = refresh_write_and_verify(src, k, cfg.device,
+                                              k_iters=cfg.k_iters)
+        at = at.at[i, j].set(new_at)
+        da = da.at[i, j].set(src - new_at)
+        total = total + st
+        mask[i, j] = True
+    A.at_blocks, A.da_blocks = at, da
+    A.release()
+    if A.age is not None:
+        A.age = A.age.reset(jnp.asarray(mask))
+    return RefreshReport(tiles=tiles, write_stats=total,
+                         full_rewrite_stats=full,
+                         scores_before=np.asarray(jax.device_get(scores)))

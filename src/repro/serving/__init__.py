@@ -15,7 +15,7 @@ from .cache import CacheEntry, CacheOutcome, CacheOverBudgetError, \
     ImageCache, POLICIES
 from .metrics import DIGITAL_FLOPS_PER_S, DIGITAL_J_PER_FLOP, \
     MetricsAccumulator, RequestRecord, digital_cost, percentile
-from .simulator import ServingConfig, SimResult, simulate
+from .simulator import ReliabilityConfig, ServingConfig, SimResult, simulate
 from .traffic import Request, TenantSpec, TrafficConfig, generate_trace, \
     zipf_weights
 
@@ -25,7 +25,7 @@ __all__ = [
     "POLICIES",
     "DIGITAL_FLOPS_PER_S", "DIGITAL_J_PER_FLOP", "MetricsAccumulator",
     "RequestRecord", "digital_cost", "percentile",
-    "ServingConfig", "SimResult", "simulate",
+    "ReliabilityConfig", "ServingConfig", "SimResult", "simulate",
     "Request", "TenantSpec", "TrafficConfig", "generate_trace",
     "zipf_weights",
 ]

@@ -108,6 +108,7 @@ class ImageCache:
         self.misses = 0
         self.reprograms = 0          # builds beyond the first, per key
         self.evictions = 0
+        self.refreshes = 0           # in-place tile refreshes of resident entries
         self.write_energy_j = 0.0    # total build (programming) energy
         self.write_latency_s = 0.0
 
@@ -174,10 +175,24 @@ class ImageCache:
         if self.release_hook is not None:
             self.release_hook(key, entry.value)
 
+    def note_refresh(self, key: Hashable, stats: WriteStats) -> None:
+        """Bill an in-place tile refresh of a resident entry.
+
+        The entry stays resident (no eviction, no rebuild, no hit-rate
+        bump); only the programming ledger moves -- refresh writes are
+        real write-verify energy and latency, just amortized to a tile
+        subset instead of the full image."""
+        if key not in self.entries:
+            raise KeyError(f"cannot refresh non-resident entry {key!r}")
+        self.refreshes += 1
+        self.write_energy_j += float(stats.energy_j)
+        self.write_latency_s += float(stats.latency_s)
+
     def stats(self) -> Dict[str, Any]:
         return {"policy": self.policy, "capacity_bytes": self.capacity_bytes,
                 "used_bytes": self.used_bytes, "entries": len(self.entries),
                 "hits": self.hits, "misses": self.misses,
                 "reprograms": self.reprograms, "evictions": self.evictions,
+                "refreshes": self.refreshes,
                 "write_energy_j": self.write_energy_j,
                 "write_latency_s": self.write_latency_s}

@@ -83,6 +83,12 @@ class MetricsAccumulator:
         self.padded_tokens = 0
         self.useful_tokens = 0
         self.n_batches = 0
+        # device-lifetime reliability (repro.reliability): populated only
+        # when the simulator runs with a ReliabilityConfig.
+        self.refreshes = 0
+        self.refresh_energy_j = 0.0
+        self.refresh_stall_s = 0.0
+        self.predicted_residuals: List[float] = []
 
     def add_batch(self, energy_j: float, useful_tokens: int,
                   padded_tokens: int) -> None:
@@ -93,6 +99,15 @@ class MetricsAccumulator:
 
     def add_record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+
+    def add_health(self, predicted_residual: float) -> None:
+        """Record the analytic image-health estimate at service time."""
+        self.predicted_residuals.append(float(predicted_residual))
+
+    def add_refresh(self, energy_j: float, stall_s: float) -> None:
+        self.refreshes += 1
+        self.refresh_energy_j += float(energy_j)
+        self.refresh_stall_s += float(stall_s)
 
     def summary(self, cache_stats: Optional[Dict[str, Any]] = None
                 ) -> Dict[str, Any]:
@@ -124,6 +139,16 @@ class MetricsAccumulator:
         }
         if cache_stats:
             out["cache"] = dict(cache_stats)
+        if self.refreshes or self.predicted_residuals:
+            preds = self.predicted_residuals
+            out["reliability"] = {
+                "refreshes": self.refreshes,
+                "refresh_energy_j": self.refresh_energy_j,
+                "refresh_stall_s": self.refresh_stall_s,
+                "mean_predicted_residual": (sum(preds) / len(preds)
+                                            if preds else 0.0),
+                "max_predicted_residual": max(preds, default=0.0),
+            }
         return out
 
 

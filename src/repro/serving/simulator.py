@@ -40,10 +40,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import RRAMBackendConfig
 from repro.configs.registry import get_arch, model_module
+from repro.core.devices import get_device
+from repro.core.write_verify import WriteStats
 from repro.models import params as P
 from repro.models.common import Runtime
 from repro.models.rram import analog_image_bytes, forward_input_stats, \
     strip_rram
+from repro.reliability.aging import predicted_residual
 from repro.train.serve import Server
 
 from .batching import Batch, BatchingConfig, RequestQueue
@@ -51,7 +54,30 @@ from .cache import ImageCache
 from .metrics import MetricsAccumulator, RequestRecord, digital_cost
 from .traffic import TenantSpec, TrafficConfig, generate_trace
 
-__all__ = ["ServingConfig", "SimResult", "simulate"]
+__all__ = ["ReliabilityConfig", "ServingConfig", "SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityConfig:
+    """Online-refresh scheduling for long-lived serving deployments.
+
+    Cached images age on the simulated clock (conductance drift) and with
+    every token served (read-disturb faults).  Before serving a resident
+    image the scheduler evaluates the analytic health proxy
+    :func:`repro.reliability.aging.predicted_residual` and refreshes in
+    place when the AGING EXCESS -- ``sqrt(predicted^2 - fresh^2)``, the
+    quadrature contribution of drift + stuck cells over the fresh
+    programming floor -- exceeds ``refresh_threshold``.  Thresholding the
+    excess (not the total) makes the knob device-independent and prevents
+    a refresh storm when the threshold is set below a device's noise floor
+    (refresh cannot go below the floor, so comparing the total would
+    re-trigger on every batch forever).  A refresh stalls the engine for
+    ``refresh_fraction`` of the tenant's full build latency and bills the
+    same fraction of its write energy (the tile-selective amortization
+    measured numerically in ``repro.reliability.refresh``)."""
+
+    refresh_threshold: float = 0.05
+    refresh_fraction: float = 0.25   # tile-selective cost vs full reprogram
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +95,7 @@ class ServingConfig:
     seed: int = 0
     max_len: int = 128
     run_model: bool = True
+    reliability: Optional[ReliabilityConfig] = None
 
 
 @dataclasses.dataclass
@@ -137,6 +164,47 @@ class _Fleet:
         self.cache: Optional[ImageCache] = None
         if cfg.rram is not None:
             self.cache = ImageCache(cfg.cache_capacity_bytes, cfg.policy)
+        # per-tenant age of the CURRENT resident image: (programmed-at
+        # sim-time, tokens served since).  Reset on build and on refresh.
+        self._age: Dict[str, Tuple[float, float]] = {}
+
+    def note_programmed(self, tenant: str, now: float) -> None:
+        self._age[tenant] = (now, 0.0)
+
+    def note_served(self, tenant: str, tokens: int) -> None:
+        t0, mvms = self._age.get(tenant, (0.0, 0.0))
+        self._age[tenant] = (t0, mvms + float(tokens))
+
+    def predicted(self, tenant: str, now: float) -> float:
+        """Analytic health of the tenant's resident image at sim-time now."""
+        rram = self.cfg.rram
+        assert rram is not None
+        t0, mvms = self._age.get(tenant, (now, 0.0))
+        return predicted_residual(get_device(rram.device),
+                                  k_iters=rram.k_iters,
+                                  seconds=max(0.0, now - t0), mvms=mvms,
+                                  n=rram.cell_rows)
+
+    def aging_excess(self, tenant: str, now: float) -> float:
+        """Drift + stuck-cell contribution over the fresh programming floor
+        (quadrature residue) -- what a refresh can actually remove."""
+        rram = self.cfg.rram
+        assert rram is not None
+        fresh = predicted_residual(get_device(rram.device),
+                                   k_iters=rram.k_iters, seconds=0.0,
+                                   mvms=0.0, n=rram.cell_rows)
+        pred = self.predicted(tenant, now)
+        return max(0.0, pred * pred - fresh * fresh) ** 0.5
+
+    def refresh_stats(self, tenant: str, fraction: float) -> WriteStats:
+        """Tile-selective refresh cost: ``fraction`` of the tenant's full
+        build write-verify cost (energy AND latency scale with tiles)."""
+        assert self.cache is not None
+        full = self.cache.entries[tenant].write_stats
+        return WriteStats(energy_j=full.energy_j * fraction,
+                          latency_s=full.latency_s * fraction,
+                          iterations=full.iterations,
+                          final_delta=full.final_delta)
 
     def arch_state(self, arch: str):
         if arch not in self._arch:
@@ -197,6 +265,20 @@ def simulate(cfg: ServingConfig) -> SimResult:
         if outcome is not None and not outcome.hit:
             # reprogramming stalls the engine for the write-verify latency
             now += float(outcome.write_stats.latency_s)
+            fleet.note_programmed(batch.tenant, now)
+        elif outcome is not None and cfg.reliability is not None:
+            # resident image: check analytic health before serving from it
+            if fleet.aging_excess(batch.tenant, now) \
+                    > cfg.reliability.refresh_threshold:
+                rs = fleet.refresh_stats(batch.tenant,
+                                         cfg.reliability.refresh_fraction)
+                now += float(rs.latency_s)          # refresh stalls the engine
+                fleet.cache.note_refresh(batch.tenant, rs)
+                metrics.add_refresh(float(rs.energy_j), float(rs.latency_s))
+                fleet.note_programmed(batch.tenant, now)
+        if outcome is not None and cfg.reliability is not None:
+            # the health this batch is actually served at (post any refresh)
+            metrics.add_health(fleet.predicted(batch.tenant, now))
 
         start = now
         if cfg.run_model:
@@ -234,6 +316,10 @@ def simulate(cfg: ServingConfig) -> SimResult:
                 energy_j=exec_j * r_useful / max(useful, 1)))
         # the engine is busy until the padded decode completes
         now = start + pre_s + step_s * batch.decode_bucket
+        if cfg.rram is not None:
+            # every padded token is a physical read against the image
+            fleet.note_served(batch.tenant, batch.padded_prompt_tokens
+                              + batch.batch_pad * batch.decode_bucket)
 
     cache_stats = fleet.cache.stats() if fleet.cache is not None else None
     return SimResult(summary=metrics.summary(cache_stats),

@@ -259,6 +259,9 @@ class SolveResult:
     # Primal-dual solves (pdhg) also return the dual variable y; None for
     # the purely-primal linear-system solvers.
     dual: Optional[jnp.ndarray] = None
+    # Checkpoint restores a fault-tolerant wrapper performed to finish this
+    # solve (repro.reliability.ft_solve); 0 for a clean run.
+    restores: int = 0
 
     @property
     def final_residual(self) -> float:
@@ -268,8 +271,13 @@ class SolveResult:
             return self.initial_residual
         r = self.residuals if self.residuals.ndim == 2 \
             else self.residuals[:, None]
-        last = jnp.nanmax(jnp.where(jnp.isnan(r), -jnp.inf, r), axis=1)
-        return float(last[self.iterations - 1])
+        row = r[self.iterations - 1]
+        if bool(jnp.all(jnp.isnan(row))):
+            # Breakdown (e.g. a device fault mid-solve): the recorded row is
+            # all NaN.  Report NaN -- which compares False against any tol --
+            # instead of the old -inf, which read as "converged".
+            return float("nan")
+        return float(jnp.nanmax(row))
 
     def __repr__(self) -> str:  # keep large arrays out of logs
         m, b = (self.residuals.shape + (1,))[:2]

@@ -68,18 +68,37 @@ def _prep(b, x0):
 # --------------------------------------------------------------------------- #
 
 def _cg_core(op: LinearOperator, b, x0, key, *, tol: float, maxiter: int,
-             use_pallas: bool):
+             use_pallas: bool, divergence: Optional[float] = None):
     batch = b.shape[1]
     bn = jnp.maximum(col_norms(b), _TINY)
     r0 = b - op.matvec(x0, jax.random.fold_in(key, 0))
     rho0 = _cdot(r0, r0)
+    rel0 = jnp.sqrt(rho0) / bn
+    # Divergence tracking is a python-static switch: with divergence=None the
+    # carry and jaxpr are byte-identical to the plain core (the invariant
+    # gate pins that trace); with a factor set, the loop also carries the
+    # best residual seen and exits on NaN or rel > divergence * best --
+    # instead of burning maxiter NaN iterations after a device fault.
+    track = divergence is not None
 
     def cond(state):
-        k, _x, _r, _p, _rho, _h, rel, _m = state
-        return jnp.logical_and(k < maxiter, _unconverged(rel, tol))
+        if track:
+            k, _x, _r, _p, _rho, _h, rel, best, _m = state
+            spike = jnp.logical_or(
+                jnp.any(jnp.isnan(rel)),
+                jnp.any(rel > divergence * jnp.maximum(best, tol)))
+            healthy = jnp.logical_not(spike)
+        else:
+            k, _x, _r, _p, _rho, _h, rel, _m = state
+            healthy = True
+        return jnp.logical_and(
+            jnp.logical_and(k < maxiter, _unconverged(rel, tol)), healthy)
 
     def body(state):
-        k, x, r, p, rho, hist, _rel, mvms = state
+        if track:
+            k, x, r, p, rho, hist, _rel, best, mvms = state
+        else:
+            k, x, r, p, rho, hist, _rel, mvms = state
         ap = op.matvec(p, jax.random.fold_in(key, 1 + k))
         alpha = rho / jnp.maximum(_cdot(p, ap), _TINY)
         if use_pallas:
@@ -93,13 +112,21 @@ def _cg_core(op: LinearOperator, b, x0, key, *, tol: float, maxiter: int,
         p = r + beta[None, :] * p
         rel = jnp.sqrt(rho_new) / bn
         hist = hist.at[k].set(rel)
+        if track:
+            best = jnp.minimum(best, rel)
+            return k + 1, x, r, p, rho_new, hist, rel, best, mvms + 1
         return k + 1, x, r, p, rho_new, hist, rel, mvms + 1
 
-    rel0 = jnp.sqrt(rho0) / bn
-    state0 = (jnp.int32(0), x0, r0, r0, rho0, init_history(maxiter, batch),
-              rel0, jnp.int32(1))
-    k, x, _r, _p, _rho, hist, _rel, mvms = jax.lax.while_loop(
-        cond, body, state0)
+    hist0 = init_history(maxiter, batch)
+    if track:
+        state0 = (jnp.int32(0), x0, r0, r0, rho0, hist0, rel0, rel0,
+                  jnp.int32(1))
+        k, x, _r, _p, _rho, hist, _rel, _best, mvms = jax.lax.while_loop(
+            cond, body, state0)
+    else:
+        state0 = (jnp.int32(0), x0, r0, r0, rho0, hist0, rel0, jnp.int32(1))
+        k, x, _r, _p, _rho, hist, _rel, mvms = jax.lax.while_loop(
+            cond, body, state0)
     return x, hist, k, mvms, rel0
 
 
@@ -109,16 +136,22 @@ def cg_pipeline(
     tol: float = 1e-6,
     maxiter: int = 200,
     backend: Optional[str] = None,
+    divergence: Optional[float] = None,
 ):
     """The jit-able CG core ``(b, x0, key) -> (x, hist, k, mvms, rel0)``.
 
     This is the whole-solve pipeline :func:`cg` jits -- exposed so
     jaxpr-level tooling (:mod:`repro.analysis.pipelines`, the invariant
     gate) can trace the exact computation a solve dispatches.  ``b`` and
-    ``x0`` are (n, batch) panels.  See DESIGN.md section 10.
+    ``x0`` are (n, batch) panels.  ``divergence`` (a factor, e.g. 10) adds
+    in-loop fault detection: exit as soon as any column's residual is NaN or
+    exceeds ``divergence`` x the best residual seen -- the hook
+    :mod:`repro.reliability.ft_solve` uses to stop a faulted segment early.
+    See DESIGN.md sections 10 and 12.
     """
     return functools.partial(_cg_core, op, tol=tol, maxiter=maxiter,
-                             use_pallas=use_pallas(backend))
+                             use_pallas=use_pallas(backend),
+                             divergence=divergence)
 
 
 def cg(
@@ -130,13 +163,18 @@ def cg(
     x0: Optional[jnp.ndarray] = None,
     key: Optional[jax.Array] = None,
     backend: Optional[str] = None,
+    divergence: Optional[float] = None,
 ) -> SolveResult:
-    """Conjugate gradients for SPD ``A``; one MVM per iteration."""
+    """Conjugate gradients for SPD ``A``; one MVM per iteration.
+
+    ``divergence`` enables early exit on NaN/residual-spike (see
+    :func:`cg_pipeline`); the default None keeps the classic trace.
+    """
     op = as_operator(A)
     bb, x0b, squeeze = _prep(b, x0)
     key = jax.random.PRNGKey(0) if key is None else key
     core = jax.jit(cg_pipeline(op, tol=tol, maxiter=maxiter,
-                               backend=backend))
+                               backend=backend, divergence=divergence))
     x, hist, k, mvms, rel0 = core(bb, x0b, key)
     return pack_result(op, "cg", x, hist, k, mvms, tol, squeeze, rel0=rel0)
 

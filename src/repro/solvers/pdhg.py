@@ -114,8 +114,13 @@ def _power_norm(op: LinearOperator, key: jax.Array, iters: int) -> jnp.ndarray:
 
 
 def _pdhg_core(op: LinearOperator, b, c, x0, y0, key, *, tau, sigma, eta,
-               tol: float, maxiter: int, power_iters: int):
+               tol: float, maxiter: int, power_iters: int,
+               divergence: Optional[float] = None):
     batch = b.shape[1]
+    # Static switch, as in krylov._cg_core: divergence=None keeps the carry
+    # and jaxpr identical to the plain core; a factor adds best-KKT tracking
+    # and NaN/spike early exit for fault-tolerant wrappers.
+    track = divergence is not None
     bn = 1.0 + col_norms(b)
     cn = 1.0 + col_norms(c)
 
@@ -145,13 +150,25 @@ def _pdhg_core(op: LinearOperator, b, c, x0, y0, key, *, tau, sigma, eta,
     rel0 = kkt(x0, y0, ax0, aty0)
 
     def cond(state):
-        k, _x, _y, _ax, _aty, _h, rel, _m = state
+        if track:
+            k, _x, _y, _ax, _aty, _h, rel, best, _m = state
+            spike = jnp.logical_or(
+                jnp.any(jnp.isnan(rel)),
+                jnp.any(rel > divergence * jnp.maximum(best, tol)))
+            healthy = jnp.logical_not(spike)
+        else:
+            k, _x, _y, _ax, _aty, _h, rel, _m = state
+            healthy = True
         # NaN-robust: a NaN residual counts as not converged.
-        return jnp.logical_and(k < maxiter,
-                               jnp.logical_not(jnp.all(rel <= tol)))
+        return jnp.logical_and(
+            jnp.logical_and(k < maxiter,
+                            jnp.logical_not(jnp.all(rel <= tol))), healthy)
 
     def body(state):
-        k, x, y, ax, aty, hist, _rel, mvms = state
+        if track:
+            k, x, y, ax, aty, hist, _rel, best, mvms = state
+        else:
+            k, x, y, ax, aty, hist, _rel, mvms = state
         x_new = jnp.maximum(x - tau_v * (c + aty), 0.0)
         x_bar = 2.0 * x_new - x
         ax_bar = op.matvec(x_bar, jax.random.fold_in(key, 2 + 2 * k))
@@ -163,12 +180,22 @@ def _pdhg_core(op: LinearOperator, b, c, x0, y0, key, *, tau, sigma, eta,
         ax_new = 0.5 * (ax_bar + ax)
         rel = kkt(x_new, y_new, ax_new, aty_new)
         hist = hist.at[k].set(rel)
+        if track:
+            best = jnp.minimum(best, rel)
+            return (k + 1, x_new, y_new, ax_new, aty_new, hist, rel, best,
+                    mvms + 1)
         return k + 1, x_new, y_new, ax_new, aty_new, hist, rel, mvms + 1
 
-    state0 = (jnp.int32(0), x0, y0, ax0, aty0, init_history(maxiter, batch),
-              rel0, jnp.int32(1))
-    k, x, y, _ax, _aty, hist, _rel, mvms = jax.lax.while_loop(
-        cond, body, state0)
+    hist0 = init_history(maxiter, batch)
+    if track:
+        state0 = (jnp.int32(0), x0, y0, ax0, aty0, hist0, rel0, rel0,
+                  jnp.int32(1))
+        k, x, y, _ax, _aty, hist, _rel, _best, mvms = jax.lax.while_loop(
+            cond, body, state0)
+    else:
+        state0 = (jnp.int32(0), x0, y0, ax0, aty0, hist0, rel0, jnp.int32(1))
+        k, x, y, _ax, _aty, hist, _rel, mvms = jax.lax.while_loop(
+            cond, body, state0)
     # mvms counts FORWARD full-batch MVMs (init + 1/iter); the transposed
     # count mirrors it exactly (init rmatvec + 1/iter).
     return x, y, hist, k, mvms, pi_mvms, rel0
@@ -183,6 +210,7 @@ def pdhg_pipeline(
     tol: float = 1e-4,
     maxiter: int = 2000,
     power_iters: int = 16,
+    divergence: Optional[float] = None,
 ):
     """The jit-able PDHG core ``(b, c, x0, y0, key) -> (...)``.
 
@@ -190,11 +218,13 @@ def pdhg_pipeline(
     while-loop, KKT residuals), exposed so jaxpr-level tooling
     (:mod:`repro.analysis.pipelines`, the invariant gate) can trace the
     exact computation a solve dispatches.  All vector operands are
-    (m, batch) / (n, batch) panels.  See DESIGN.md section 10.
+    (m, batch) / (n, batch) panels.  ``divergence`` (a factor) adds in-loop
+    fault detection -- exit on NaN or a KKT residual above ``divergence`` x
+    the best seen (see DESIGN.md sections 10 and 12).
     """
     return functools.partial(
         _pdhg_core, op, tau=tau, sigma=sigma, eta=eta, tol=tol,
-        maxiter=maxiter, power_iters=power_iters)
+        maxiter=maxiter, power_iters=power_iters, divergence=divergence)
 
 
 def pdhg(
@@ -211,6 +241,7 @@ def pdhg(
     y0: Optional[jnp.ndarray] = None,
     key: Optional[jax.Array] = None,
     power_iters: int = 16,
+    divergence: Optional[float] = None,
 ) -> SolveResult:
     """Solve ``min c'x  s.t.  A x = b, x >= 0`` by PDHG, matvec/rmatvec-only.
 
@@ -254,7 +285,8 @@ def pdhg(
     key = jax.random.PRNGKey(0) if key is None else key
 
     core = jax.jit(pdhg_pipeline(op, tau=tau, sigma=sigma, eta=eta, tol=tol,
-                                 maxiter=maxiter, power_iters=power_iters))
+                                 maxiter=maxiter, power_iters=power_iters,
+                                 divergence=divergence))
     x, y, hist, k, mvms, pi_mvms, rel0 = core(bb, cc, x0b, y0b, key)
     res = pack_result(op, "pdhg", x, hist, k, mvms, tol, squeeze,
                       mvms_single=int(pi_mvms), rel0=rel0, mvms_t=int(mvms),

@@ -1,0 +1,123 @@
+"""Direct unit tests for repro.distributed.fault_tolerance: the checkpoint
+store and the straggler watchdog, exercised in-process (no mesh needed --
+the elastic/distributed path is covered by test_distributed.py)."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.write_verify import WriteStats
+from repro.distributed.fault_tolerance import CheckpointManager, Watchdog
+
+
+def _tree(seed: int):
+    """A realistic solver-state pytree: arrays of mixed dtype plus a
+    registered-dataclass WriteStats of scalars."""
+    key = jax.random.PRNGKey(seed)
+    stats = WriteStats(energy_j=jnp.float32(1.5 * seed),
+                       latency_s=jnp.float32(0.25),
+                       iterations=jnp.int32(seed),
+                       final_delta=jnp.float32(1e-3))
+    return {"x": jax.random.normal(key, (16, 3), jnp.float32),
+            "step": jnp.int32(seed),
+            "stats": stats}
+
+
+def _assert_trees_equal(got, want):
+    leaves_g = jax.tree_util.tree_leaves(got)
+    leaves_w = jax.tree_util.tree_leaves(want)
+    assert len(leaves_g) == len(leaves_w)
+    for g, w in zip(leaves_g, leaves_w):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        assert g.dtype == w.dtype
+
+
+def test_blocking_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    tree = _tree(4)
+    mgr.save(7, tree, blocking=True, extra={"note": "seg-7"})
+    out = mgr.restore(_tree(0), step=7)
+    _assert_trees_equal(out, tree)
+    man = mgr.manifest(7)
+    assert man["step"] == 7
+    assert man["extra"] == {"note": "seg-7"}
+    # leaf metadata is recorded for every pytree leaf, WriteStats included
+    assert any("stats" in k for k in man["leaves"])
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    tree = _tree(9)
+    mgr.save(1, tree, blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+    _assert_trees_equal(mgr.restore(_tree(0), step=1), tree)
+
+
+def test_async_snapshot_is_synchronous(tmp_path):
+    """The array snapshot happens at save() time: mutating the live state
+    right after an async save must not corrupt the checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    tree = _tree(5)
+    want = jax.tree.map(np.asarray, tree)
+    mgr.save(2, tree, blocking=False)
+    tree["x"] = tree["x"] * 0.0       # post-save mutation of the live dict
+    mgr.wait()
+    _assert_trees_equal(mgr.restore(_tree(0), step=2), want)
+
+
+def test_latest_step_and_gc_keep_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.all_steps() == [3, 4]   # keep_n=2 garbage-collects 1 and 2
+    assert mgr.latest_step() == 4
+    # restore with no explicit step targets the latest
+    _assert_trees_equal(mgr.restore(_tree(0)), _tree(4))
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).restore(_tree(0))
+
+
+def test_restore_casts_to_target_dtype(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"v": jnp.arange(4, dtype=jnp.float32)}, blocking=True)
+    out = mgr.restore({"v": jnp.zeros(4, jnp.bfloat16)}, step=1)
+    assert out["v"].dtype == jnp.bfloat16
+
+
+def test_save_is_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _tree(1), blocking=True)
+    names = os.listdir(str(tmp_path))
+    assert names == ["step_000000003"]
+    assert not any(n.startswith(".tmp") for n in names)
+
+
+def test_watchdog_flags_stragglers():
+    events = []
+    wd = Watchdog(threshold=2.0, patience=2,
+                  on_straggler=lambda step: events.append(step))
+    # needs >= 5 samples before it will flag anything
+    for s in range(5):
+        assert not wd.record(s, 1.0)
+    assert not wd.record(5, 1.9)       # under threshold x median
+    assert wd.record(6, 5.0)           # slow step 1: flagged, no callback yet
+    assert events == []
+    assert wd.record(7, 5.0)           # slow step 2: patience reached
+    assert events == [7]
+    assert wd.events == [6, 7]
+    # a healthy step resets the consecutive-slow counter
+    assert not wd.record(8, 1.0)
+    assert wd.record(9, 5.0)
+    assert events == [7]               # one slow step after reset: no callback
+
+
+def test_watchdog_quiet_before_warmup():
+    wd = Watchdog(threshold=1.5, patience=1)
+    # even an absurd outlier is not flagged before 5 samples exist
+    assert not wd.record(0, 100.0)
+    assert wd.events == []
