@@ -23,9 +23,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (lm_step, pdhg_convergence, reliability, serving,
-                   solver_convergence, streamed_scaling, strong_scaling,
-                   table1_ec, weak_scaling, writeverify_sweep)
+    from . import (lm_step, model_dispatch, pdhg_convergence, reliability,
+                   serving, solver_convergence, streamed_scaling,
+                   strong_scaling, table1_ec, weak_scaling, writeverify_sweep)
     modules = [
         ("table1_ec", table1_ec),
         ("writeverify_sweep", writeverify_sweep),
@@ -34,6 +34,7 @@ def main() -> None:
         ("weak_scaling", weak_scaling),
         ("strong_scaling", strong_scaling),
         ("streamed_scaling", streamed_scaling),
+        ("model_dispatch", model_dispatch),
         ("lm_step", lm_step),
         ("serving", serving),
         ("reliability", reliability),

@@ -96,6 +96,9 @@ def _service_row(name: str, summary: Dict) -> Dict:
         "padding_overhead": summary["padding_overhead"],
         "n_requests": summary["n_requests"],
         "useful_tokens": summary["useful_tokens"],
+        "dispatches_per_batch": summary["dispatches_per_batch"],
+        "exec_dispatches": summary["exec_dispatches"],
+        "program_dispatches": summary["program_dispatches"],
     }
     if "cache" in summary:
         row["cache_hits"] = summary["cache"]["hits"]

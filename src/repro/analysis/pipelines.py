@@ -142,6 +142,52 @@ def _build_local_aged() -> BuiltPipeline:
                         args=(_vec(a.shape[1]), _key_spec()))
 
 
+def _build_group(backend: str, transpose: bool) -> BuiltPipeline:
+    """Grouped multi-image execution (DESIGN.md section 13): eight
+    same-geometry images stacked by ``program_group`` and executed as ONE
+    top-level dispatch -- the tentpole claim the DispatchCount pass pins
+    (``max_top_level=1``)."""
+    from repro.engine import AnalogEngine
+    cfg = _small_cfg()
+    engine = AnalogEngine(cfg, backend=backend)
+    key = _key()
+    stack = jax.random.normal(key, (8, 100, 90), jnp.float32) / 10
+    G = engine.program_group(stack, key)
+    n_in = stack.shape[1] if transpose else stack.shape[2]
+    return BuiltPipeline(
+        fn=jax.jit(engine.group_mvm_fn(G, transpose=transpose)),
+        args=(_vec(n_in), _key_spec()))
+
+
+def _build_group_moe() -> BuiltPipeline:
+    """Eight MoE expert FFN kernels -- a pytree, not a pre-stacked array --
+    grouped into one image and executed as a single dispatch: the
+    one-launch-per-layer-group pattern a whole analog MoE forward uses."""
+    from repro.engine import AnalogEngine
+    cfg = _small_cfg()
+    engine = AnalogEngine(cfg, backend="reference")
+    key = _key()
+    stack = jax.random.normal(key, (8, 64, 128), jnp.float32) / 10
+    experts = {f"expert_{g}": stack[g] for g in range(stack.shape[0])}
+    G = engine.program_group(experts, key)
+    return BuiltPipeline(fn=jax.jit(engine.group_mvm_fn(G)),
+                        args=(_vec(stack.shape[2]), _key_spec()))
+
+
+def _build_chain(backend: str) -> BuiltPipeline:
+    """The whole-model analog forward: eight square layers chained through
+    ``lax.scan`` with a relu between members -- activation in, logits out,
+    ONE device dispatch (``engine.chain_mvm``)."""
+    from repro.engine import AnalogEngine
+    cfg = _small_cfg()
+    engine = AnalogEngine(cfg, backend=backend)
+    key = _key()
+    stack = jax.random.normal(key, (8, 96, 96), jnp.float32) / 10
+    G = engine.program_group(stack, key)
+    return BuiltPipeline(fn=jax.jit(engine.chain_fn(G, activation="relu")),
+                        args=(_vec(stack.shape[2]), _key_spec()))
+
+
 def _build_streamed(backend: str, transpose: bool) -> BuiltPipeline:
     from repro.engine import AnalogEngine
     cfg = _small_cfg()
@@ -265,6 +311,26 @@ def registered_pipelines() -> List[PipelineSpec]:
                 build=(lambda b=backend, t=transpose: _build_streamed(b, t)),
                 aval_budget=64 * small, max_producer_calls=3,
                 allow_baked=True))
+
+    group_budget = 8 * 64 * small       # an 8-member group of small images
+    for backend in ("reference", "pallas"):
+        for transpose, direction in ((False, "forward"), (True, "rmatvec")):
+            specs.append(PipelineSpec(
+                name=f"group-{direction}-{backend}",
+                placement="local", direction=direction, backend=backend,
+                build=(lambda b=backend, t=transpose: _build_group(b, t)),
+                aval_budget=group_budget, max_top_level=1,
+                allow_baked=True))
+        specs.append(PipelineSpec(
+            name=f"group-chain-wholemodel-{backend}",
+            placement="local", direction="forward", backend=backend,
+            build=(lambda b=backend: _build_chain(b)),
+            aval_budget=group_budget, max_top_level=1, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="group-moe-experts-reference",
+        placement="local", direction="forward", backend="reference",
+        build=_build_group_moe, aval_budget=group_budget,
+        max_top_level=1, allow_baked=True))
 
     specs.append(PipelineSpec(
         name="local-aged-forward-reference",

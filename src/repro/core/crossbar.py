@@ -50,6 +50,12 @@ __all__ = [
     "local_program_dense",
     "local_dense_mvm",
     "local_dense_rmvm",
+    "group_program_blocks",
+    "grouped_block_mvm",
+    "grouped_block_rmvm",
+    "grouped_streamed_program_blocks",
+    "grouped_streamed_block_mvm",
+    "grouped_streamed_block_rmvm",
     "produce_blocks",
     "producer_is_traceable",
     "streamed_program_blocks",
@@ -476,6 +482,180 @@ def local_dense_rmvm(
     return programmed_block_rmvm(
         block_partition(at, cfg.geom), block_partition(da, cfg.geom),
         yb, key, cfg, m=m, n=n, tier2=tier2, use_kernel=use_kernel)
+
+
+# --------------------------------------------------------------------------- #
+# Grouped (multi-image) stages: one pipeline over a stack of programmed images
+# --------------------------------------------------------------------------- #
+#
+# A *group* stacks the per-tile images of several same-geometry matrices along
+# a leading image axis ``g`` and runs the whole stack as ONE pipeline -- the
+# whole-model dispatch primitive behind :class:`repro.engine.AnalogMatrixGroup`
+# (an analog transformer block, or all experts of an MoE layer, executes as a
+# single device dispatch instead of one per member).  Every grouped stage is a
+# ``vmap``/``lax.map`` of the corresponding solo stage with PER-MEMBER keys, so
+# member ``g`` of a grouped program/execute consumes exactly the
+# ``block_keys(keys[g], mb, nb)`` schedule its solo counterpart would: the
+# stacked image is bit-identical, member for member, to solo programming, and
+# every grouped DAC draw matches the solo draw under the same member key.
+
+def group_program_blocks(
+    a_stack: jnp.ndarray,
+    keys: jax.Array,
+    cfg: CrossbarConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Program a stack of same-shape matrices in one pipeline.
+
+    ``a_stack`` is (g, m, n); ``keys`` holds one base key per member.  Returns
+    ``(at_blocks, da_blocks)``, both (g, mb, nb, cap_m, cap_n).  Member ``g``
+    is :func:`program_blocks`\\ ``(a_stack[g], keys[g], cfg)`` exactly (same
+    per-block k_a halves, same draws) -- grouping changes the dispatch count,
+    never the image.
+    """
+    return jax.vmap(lambda a, k: program_blocks(a, k, cfg))(a_stack, keys)
+
+
+def grouped_block_mvm(
+    at_blocks: jnp.ndarray,
+    da_blocks: jnp.ndarray,
+    xb: jnp.ndarray,
+    keys: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    tier2: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Corrected MVM of every group member in one pipeline.
+
+    ``at_blocks``/``da_blocks`` are (g, mb, nb, cap_m, cap_n) stacked images,
+    ``xb`` is (g, n, batch) -- one input panel per member -- and ``keys`` one
+    execute key per member.  Returns (g, m, batch).  Member ``g`` reproduces
+    :func:`programmed_block_mvm` under ``keys[g]`` (the identical per-block
+    k_x halves), including tier-2 denoise per member.  ``use_kernel=True``
+    runs the fused Pallas tile step under a member ``lax.map`` (the kernel
+    sees one member at a time -- the extra image axis never reaches the
+    pallas grid).
+    """
+    run = partial(programmed_block_mvm, cfg=cfg, m=m, n=n, tier2=tier2,
+                  use_kernel=use_kernel)
+    if use_kernel:
+        return jax.lax.map(lambda ops: run(*ops),
+                           (at_blocks, da_blocks, xb, keys))
+    return jax.vmap(lambda at, da, x, k: run(at, da, x, k))(
+        at_blocks, da_blocks, xb, keys)
+
+
+def grouped_block_rmvm(
+    at_blocks: jnp.ndarray,
+    da_blocks: jnp.ndarray,
+    yb: jnp.ndarray,
+    keys: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    tier2: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Transposed grouped execute: ``A_g.T @ y_g`` for every member at once.
+
+    The exact mirror of :func:`grouped_block_mvm` over
+    :func:`programmed_block_rmvm`: ``yb`` is (g, m, batch), the result
+    (g, n, batch), and member ``g`` consumes the same per-block k_x halves a
+    solo transposed execute under ``keys[g]`` would.
+    """
+    run = partial(programmed_block_rmvm, cfg=cfg, m=m, n=n, tier2=tier2,
+                  use_kernel=use_kernel)
+    if use_kernel:
+        return jax.lax.map(lambda ops: run(*ops),
+                           (at_blocks, da_blocks, yb, keys))
+    return jax.vmap(lambda at, da, y, k: run(at, da, y, k))(
+        at_blocks, da_blocks, yb, keys)
+
+
+def _switched_producer(block_fns: Tuple[Callable, ...], g: jax.Array):
+    """Member ``g``'s producer as one traceable fn: a ``lax.switch`` over the
+    member list (``g`` may be a scan-carried tracer -- only the selected
+    branch executes at runtime)."""
+    branches = tuple((lambda i, j, f=f: f(i, j)) for f in block_fns)
+    return lambda i, j: jax.lax.switch(g, branches, i, j)
+
+
+def grouped_streamed_program_blocks(
+    block_fns: Tuple[Callable, ...],
+    keys: jax.Array,
+    cfg: CrossbarConfig,
+    mb: int,
+    nb: int,
+) -> jnp.ndarray:
+    """Scan-program a group of streamed producers in one pipeline.
+
+    One ``lax.map`` over members, each running the scan-fused
+    :func:`streamed_program_blocks` sweep with its own producer (selected by
+    ``lax.switch`` on the member index) and its own key schedule -- member
+    ``g``'s image is bit-identical to its solo streamed program.  Returns
+    (g, mb, nb, cap_m, cap_n).
+    """
+    def one(ops):
+        g, k = ops
+        return streamed_program_blocks(
+            _switched_producer(block_fns, g), k, cfg, mb, nb)
+
+    return jax.lax.map(one, (jnp.arange(len(block_fns)), keys))
+
+
+def grouped_streamed_block_mvm(
+    block_fns: Tuple[Callable, ...],
+    at_blocks: jnp.ndarray,
+    xb: jnp.ndarray,
+    keys: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    use_kernel: bool = False,
+    tier2: bool = True,
+) -> jnp.ndarray:
+    """Grouped streamed execute: every member's scan-fused MVM in one
+    pipeline (dA re-derived per block from each member's own producer).
+
+    ``at_blocks`` is the (g, mb, nb, cap_m, cap_n) stacked resident image,
+    ``xb`` (g, n, batch).  Member ``g`` reproduces :func:`streamed_block_mvm`
+    under ``keys[g]`` exactly.  Returns (g, m, batch).
+    """
+    def one(ops):
+        g, at, x, k = ops
+        return streamed_block_mvm(
+            _switched_producer(block_fns, g), at, x, k, cfg, m=m, n=n,
+            use_kernel=use_kernel, tier2=tier2)
+
+    return jax.lax.map(one, (jnp.arange(len(block_fns)), at_blocks, xb, keys))
+
+
+def grouped_streamed_block_rmvm(
+    block_fns: Tuple[Callable, ...],
+    at_blocks: jnp.ndarray,
+    yb: jnp.ndarray,
+    keys: jax.Array,
+    cfg: CrossbarConfig,
+    *,
+    m: int,
+    n: int,
+    use_kernel: bool = False,
+    tier2: bool = True,
+) -> jnp.ndarray:
+    """Grouped streamed TRANSPOSED execute: the :func:`streamed_block_rmvm`
+    mirror of :func:`grouped_streamed_block_mvm` (``yb`` (g, m, batch) ->
+    (g, n, batch), same per-block k_x halves per member as forward)."""
+    def one(ops):
+        g, at, y, k = ops
+        return streamed_block_rmvm(
+            _switched_producer(block_fns, g), at, y, k, cfg, m=m, n=n,
+            use_kernel=use_kernel, tier2=tier2)
+
+    return jax.lax.map(one, (jnp.arange(len(block_fns)), at_blocks, yb, keys))
 
 
 # --------------------------------------------------------------------------- #

@@ -70,6 +70,9 @@ __all__ = [
     "make_distributed_streamed_program",
     "make_distributed_streamed_mvm",
     "make_distributed_streamed_rmvm",
+    "make_distributed_group_program",
+    "make_distributed_group_mvm",
+    "make_distributed_group_rmvm",
     "pallas_shard_map_supported",
 ]
 
@@ -247,6 +250,154 @@ def make_distributed_rmvm(
         in_specs=(P(row_spec, col_axis), P(row_spec, col_axis),
                   P(row_spec, None), P()),
         out_specs=(P(col_axis, None), P()),
+        **kwargs,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Grouped placement (a stack of same-geometry images in ONE shard_map program)
+# --------------------------------------------------------------------------- #
+
+def _scale_stats(stats: WriteStats, factor: int) -> WriteStats:
+    """A group bills ``factor`` members' writes (members program in parallel
+    onto disjoint MCA sets, so latency scales with energy here)."""
+    return WriteStats(
+        energy_j=stats.energy_j * factor,
+        latency_s=stats.latency_s * factor,
+        iterations=stats.iterations,
+        final_delta=stats.final_delta,
+    )
+
+
+def make_distributed_group_program(
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+):
+    """Build the shard_map'd GROUP program stage (unjitted, lowerable).
+
+    Returned fn: (a_g (g, m, n), keys (g, ...)) -> (at_g, da_g, WriteStats).
+    The whole group programs in ONE shard_map dispatch: each device vmaps the
+    shared :func:`~repro.core.crossbar.local_program_dense` stage over the
+    leading image axis of its (g, m_loc, n_loc) resident slab, with member
+    ``g`` consuming the device fold of ``keys[g]`` -- exactly the key a solo
+    distributed program of that member would consume, so the stacked image is
+    bit-identical to ``g`` solo programs.  Operands stay sharded over
+    (``row_axes``, ``col_axis``); the image axis is never split.
+    """
+    axes = tuple(row_axes) + (col_axis,)
+
+    def local_fn(a_slab, keys):
+        dev_keys = jax.vmap(lambda k: _device_key(k, axes))(keys)
+        size, m_loc, n_loc = a_slab.shape
+        at, da = jax.vmap(lambda a, k: local_program_dense(a, k, cfg))(
+            a_slab, dev_keys)
+        stats = _mean_stats(
+            _scale_stats(matrix_write_cost(m_loc, n_loc, cfg), size), axes)
+        return at, da, stats
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(None, row_spec, col_axis), P()),
+        out_specs=(P(None, row_spec, col_axis), P(None, row_spec, col_axis),
+                   P()),
+    )
+
+
+def make_distributed_group_mvm(
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    use_kernel: bool = False,
+):
+    """Build the shard_map'd GROUP execute stage (unjitted, lowerable).
+
+    Returned fn: (at_g, da_g, x_g (g, n, batch), keys (g, ...)) ->
+    (y_g (g, m, batch) row-sharded, WriteStats).  The whole group executes in
+    ONE dispatch with ONE collective: tier-1 runs vmapped over the image axis
+    against the resident slabs, the stacked (g, m_loc, batch) partials psum
+    over ``col_axis`` ONCE for the whole group (not once per member), and
+    tier-2 denoises each member's on-node segment.  Member ``g`` under
+    ``keys[g]`` is bit-identical to a solo distributed execute of that member
+    under the same key.
+    """
+    axes = tuple(row_axes) + (col_axis,)
+
+    def local_fn(at_slab, da_slab, x_slab, keys):
+        dev_keys = jax.vmap(lambda k: _device_key(k, axes))(keys)
+        size, m_loc, n_loc = at_slab.shape
+        batch = x_slab.shape[2]
+        p = jax.vmap(lambda at, da, x, k: local_dense_mvm(
+            at, da, x, k, cfg, tier2=False, use_kernel=use_kernel))(
+            at_slab, da_slab, x_slab, dev_keys)
+        p = jax.lax.psum(p, axis_name=col_axis)      # ONE psum for the group
+        if cfg.ec:
+            p = jax.vmap(lambda q: denoise_least_square(
+                q, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method))(p)
+        stats = _mean_stats(
+            _scale_stats(input_write_cost(m_loc, n_loc, cfg, batch=batch),
+                         size), axes)
+        return p, stats
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    kwargs = {"check_vma": False} if use_kernel else {}
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(None, row_spec, col_axis), P(None, row_spec, col_axis),
+                  P(None, col_axis, None), P()),
+        out_specs=(P(None, row_spec, None), P()),
+        **kwargs,
+    )
+
+
+def make_distributed_group_rmvm(
+    cfg: CrossbarConfig,
+    mesh: Mesh,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axis: str = "model",
+    *,
+    use_kernel: bool = False,
+):
+    """Build the shard_map'd GROUP transposed execute stage (unjitted).
+
+    The :func:`make_distributed_rmvm` mirror of
+    :func:`make_distributed_group_mvm`: ``y_g`` (g, m, batch) enters sharded
+    over the ROW axes, transposed tier-1 runs vmapped over the image axis, the
+    stacked partials psum ONCE over ``row_axes`` for the whole group, and the
+    (g, n, batch) output comes back column-sharded over ``col_axis``.
+    """
+    axes = tuple(row_axes) + (col_axis,)
+
+    def local_fn(at_slab, da_slab, y_slab, keys):
+        dev_keys = jax.vmap(lambda k: _device_key(k, axes))(keys)
+        size, m_loc, n_loc = at_slab.shape
+        batch = y_slab.shape[2]
+        p = jax.vmap(lambda at, da, y, k: local_dense_rmvm(
+            at, da, y, k, cfg, tier2=False, use_kernel=use_kernel))(
+            at_slab, da_slab, y_slab, dev_keys)
+        p = jax.lax.psum(p, axis_name=tuple(row_axes))   # ONE psum per group
+        if cfg.ec:
+            p = jax.vmap(lambda q: denoise_least_square(
+                q, lam=cfg.lam, h=cfg.h, method=cfg.denoise_method))(p)
+        stats = _mean_stats(
+            _scale_stats(input_write_cost(m_loc, n_loc, cfg, batch=batch,
+                                          transpose=True), size), axes)
+        return p, stats
+
+    row_spec = row_axes if len(row_axes) > 1 else row_axes[0]
+    kwargs = {"check_vma": False} if use_kernel else {}
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(None, row_spec, col_axis), P(None, row_spec, col_axis),
+                  P(None, row_spec, None), P()),
+        out_specs=(P(None, col_axis, None), P()),
         **kwargs,
     )
 

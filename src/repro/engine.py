@@ -144,9 +144,10 @@ into this handle's one-time ``write_stats`` and the accumulated per-MVM
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Callable, Optional, Tuple, Union
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -156,11 +157,76 @@ from repro.core.crossbar import CrossbarConfig
 from repro.core.error_correction import denoise_least_square
 from repro.core.write_verify import WriteStats
 
-__all__ = ["AnalogEngine", "AnalogMatrix", "TransposedAnalogMatrix",
-           "EXECUTION_MODES", "BACKENDS"]
+__all__ = ["AnalogEngine", "AnalogMatrix", "AnalogMatrixGroup",
+           "TransposedAnalogMatrix", "EXECUTION_MODES", "BACKENDS",
+           "SCAN_CACHE_MAX", "CHAIN_ACTIVATIONS"]
 
 EXECUTION_MODES = ("local", "streamed", "distributed")
 BACKENDS = ("reference", "pallas")
+
+#: Per-handle bound on cached jitted execute pipelines.  Long-lived serving
+#: handles see many (backend, direction, batch-bucket) combinations; each
+#: cached entry pins a compiled XLA executable, so an unbounded dict is a
+#: slow leak.  The cache is an LRU keyed BY batch size (among other things):
+#: evicting an entry drops its jit object and every trace inside it.
+SCAN_CACHE_MAX = 8
+
+#: Static elementwise nonlinearities :meth:`AnalogEngine.chain_mvm` may fuse
+#: between chained group members (None = pure linear chain).
+CHAIN_ACTIVATIONS = {
+    None: lambda x: x,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+class _BoundedCache:
+    """Tiny LRU for per-handle jitted pipelines (see :data:`SCAN_CACHE_MAX`).
+
+    Dropping an entry releases the jit wrapper -- and with it every compiled
+    trace it held -- so a handle that cycles through many batch buckets keeps
+    at most ``maxsize`` live executables instead of growing without bound.
+    """
+
+    def __init__(self, maxsize: int = SCAN_CACHE_MAX):
+        self.maxsize = maxsize
+        self._entries: "collections.OrderedDict" = collections.OrderedDict()
+
+    def get(self, key):
+        fn = self._entries.get(key)
+        if fn is not None:
+            self._entries.move_to_end(key)
+        return fn
+
+    def put(self, key, fn) -> None:
+        self._entries[key] = fn
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+
+def _scan_cache(handle) -> _BoundedCache:
+    """The handle's bounded pipeline cache, created on first use."""
+    if not isinstance(handle._scan_exec, _BoundedCache):
+        handle._scan_exec = _BoundedCache()
+    return handle._scan_exec
+
+
+def _scale_stats(stats: WriteStats, factor: float) -> WriteStats:
+    """``factor`` members' worth of one member's :class:`WriteStats`."""
+    return WriteStats(
+        energy_j=stats.energy_j * factor,
+        latency_s=stats.latency_s * factor,
+        iterations=stats.iterations,
+        final_delta=stats.final_delta,
+    )
 
 
 @dataclasses.dataclass
@@ -201,9 +267,10 @@ class AnalogMatrix:
     calls: int = 0
     # cached dense padded layout for the pallas backend (built on first use).
     _padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
-    # per-handle jitted scan pipelines keyed by use_kernel (built on first
-    # execute; dies with the handle -- see the jit-scoping note below).
-    _scan_exec: Optional[dict] = None
+    # per-handle jitted scan pipelines: a _BoundedCache LRU keyed by
+    # (backend, direction, batch bucket), built on first execute; dies with
+    # the handle -- see the jit-scoping note below.
+    _scan_exec: Optional["_BoundedCache"] = None
 
     @property
     def m(self) -> int:
@@ -372,6 +439,124 @@ class TransposedAnalogMatrix:
                                                     transpose=True)
 
 
+@dataclasses.dataclass
+class AnalogMatrixGroup:
+    """A stack of same-geometry programmed images executed as ONE dispatch.
+
+    Built by :meth:`AnalogEngine.program_group` (a pytree of same-shape
+    matrices or a tuple of traceable producers) or :meth:`AnalogEngine.group`
+    (stacking existing compatible handles).  The ``size`` member images share
+    one stacked layout along a leading image axis; every execute --
+    :meth:`AnalogEngine.group_mvm`, :meth:`~AnalogEngine.group_rmvm`,
+    :meth:`~AnalogEngine.chain_mvm` -- runs the whole group in a single
+    device dispatch, so an L-layer analog model costs O(1) launches instead
+    of O(L).  Member ``g`` draws exactly what a solo handle programmed with
+    ``member_keys[g]`` draws: grouping changes the dispatch count, never the
+    key schedule.  ``group()``-built stacks carry the solo images bit-exactly;
+    ``program_group``'s fused encode agrees with the eager per-member path to
+    float32 rounding (XLA may reassociate the vmapped arithmetic).  See
+    DESIGN.md section 13.
+    """
+
+    engine: "AnalogEngine"
+    size: int
+    shape: Tuple[int, int]          # per-member (m, n)
+    base_key: jax.Array
+    member_keys: jax.Array          # stacked per-member base keys, leading g
+    write_stats: WriteStats         # total across all members
+    # local / streamed layout: (g, mb, nb, cap_m, cap_n) stacked tiles.
+    at_blocks: Optional[jnp.ndarray] = None
+    da_blocks: Optional[jnp.ndarray] = None
+    # streamed layout: one traceable producer per member (dA re-derived per
+    # block inside the grouped scan; da_blocks stays None).
+    block_fns: Optional[Tuple[Callable, ...]] = None
+    # distributed dense layout: (g, m, n) stacked arrays, each member
+    # block-sharded over the mesh (leading axis replicated).
+    at_dense: Optional[jnp.ndarray] = None
+    da_dense: Optional[jnp.ndarray] = None
+    mesh_sharded: bool = False
+    # stacked AgeLedger (leading g on every field) attached by
+    # repro.reliability.aging.attach_group_age: the grouped execute ages
+    # every member inside the same single dispatch.
+    ages: Optional["object"] = None
+    calls: int = 0
+    _padded: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+    _scan_exec: Optional["_BoundedCache"] = None
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    def _grid(self) -> Tuple[int, int]:
+        """(mb, nb) capacity-block grid of every member."""
+        if self.at_blocks is not None:
+            return self.at_blocks.shape[1:3]
+        cap_m, cap_n = self.engine.cfg.geom.capacity
+        return -(-self.m // cap_m), -(-self.n // cap_n)
+
+    def member(self, g: int) -> AnalogMatrix:
+        """Member ``g`` as a standalone :class:`AnalogMatrix` view.
+
+        Slices the stacked operands (no copy beyond the slice); the view
+        executes through the solo paths with the member's own base key and
+        a proportional share of the group's one-time write cost.
+        """
+        if not 0 <= g < self.size:
+            raise IndexError(f"member {g} of a size-{self.size} group")
+        stats = _scale_stats(self.write_stats, 1.0 / self.size)
+        if self.at_dense is not None:
+            return AnalogMatrix(
+                engine=self.engine, shape=self.shape,
+                base_key=self.member_keys[g], write_stats=stats,
+                at_dense=self.at_dense[g], da_dense=self.da_dense[g],
+                mesh_sharded=True)
+        return AnalogMatrix(
+            engine=self.engine, shape=self.shape,
+            base_key=self.member_keys[g], write_stats=stats,
+            at_blocks=self.at_blocks[g],
+            da_blocks=None if self.da_blocks is None else self.da_blocks[g],
+            block_fn=None if self.block_fns is None else self.block_fns[g],
+            block_traceable=self.block_fns is not None)
+
+    def __matmul__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.engine.group_mvm(self, x)
+
+    def input_write_stats(self, batch: int = 1,
+                          *, transpose: bool = False) -> WriteStats:
+        """Per-execution input-write cost of the WHOLE group (``size``
+        members' DAC passes + EC replicas)."""
+        one = self.engine.input_write_stats(self, batch, transpose=transpose)
+        return _scale_stats(one, self.size)
+
+    @property
+    def image_nbytes(self) -> int:
+        """Resident bytes of the stacked operands plus derived caches."""
+        total = 0
+        for arr in (self.at_blocks, self.da_blocks, self.at_dense,
+                    self.da_dense):
+            if arr is not None and hasattr(arr, "nbytes"):
+                total += int(arr.nbytes)
+        if self._padded is not None:
+            total += sum(int(p.nbytes) for p in self._padded
+                         if hasattr(p, "nbytes"))
+        return total
+
+    def release(self) -> int:
+        """Drop derived execution caches (padded stack, jitted grouped
+        pipelines), returning the bytes freed; the programmed stack stays."""
+        freed = 0
+        if self._padded is not None:
+            freed = sum(int(p.nbytes) for p in self._padded
+                        if hasattr(p, "nbytes"))
+            self._padded = None
+        self._scan_exec = None
+        return freed
+
+
 _assemble = crossbar.assemble_blocks
 
 
@@ -403,28 +588,33 @@ def _exec_reference_aged(at_blocks, da_blocks, xb, key, age, *, cfg, m, n,
     return run(at_aged, da_blocks, xb, key, cfg, m=m, n=n)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
-def _exec_pallas(at, da, xb, key, *, cfg, m, n):
-    """Tier-1 via the fused Pallas EC kernel + tier-2 via the solver kernels.
+def _pallas_corrected(at, da, xb, key, cfg, m, n, transpose):
+    """Shared Pallas execute body (unjitted; used solo-jitted and grouped).
 
-    ``at``/``da`` are the dense *padded* operands (assembled once at first use
-    and cached on the handle).  The kernel path encodes x with a single DAC
-    pass (one noise draw for the whole padded vector) instead of the reference
+    ``at``/``da`` are the dense *padded* operands.  The kernel path encodes
+    the input with a single DAC pass (one noise draw for the whole padded
+    vector -- fold 1 of the call key forward, fold 2 transposed, keeping the
+    directions distinct when a caller reuses a key) instead of the reference
     path's per-(block, chunk) draws -- statistically identical, one kernel
-    launch.
+    launch: ``y^T = x^T At^T + xt^T dA^T`` forward,
+    ``z^T = y^T At + yt^T dA`` backwards through the same operands.
     """
     from repro.kernels import ops as kops
 
-    x_pad = jnp.pad(xb, ((0, at.shape[1] - xb.shape[0]), (0, 0)))
+    pad_to = at.shape[0] if transpose else at.shape[1]
+    x_pad = jnp.pad(xb, ((0, pad_to - xb.shape[0]), (0, 0)))
     if cfg.encode_inputs:
-        x_t = crossbar._encode_vec(x_pad, jax.random.fold_in(key, 1), cfg)
+        fold = 2 if transpose else 1
+        x_t = crossbar._encode_vec(x_pad, jax.random.fold_in(key, fold), cfg)
     else:
         x_t = x_pad
     if cfg.ec:
-        # y^T = x^T A_tilde^T + x_tilde^T dA^T, one fused kernel call.
-        p = kops.rram_ec_matmul(x_pad.T, x_t.T, at.T, da.T).T[:m]
+        if transpose:
+            p = kops.rram_ec_matmul(x_pad.T, x_t.T, at, da).T[:n]
+        else:
+            p = kops.rram_ec_matmul(x_pad.T, x_t.T, at.T, da.T).T[:m]
     else:
-        p = (at @ x_t)[:m]
+        p = (at.T @ x_t)[:n] if transpose else (at @ x_t)[:m]
     if cfg.ec:
         if cfg.denoise_method == "neumann":
             p = kops.denoise_stencil(p, lam=cfg.lam, h=cfg.h)
@@ -434,39 +624,80 @@ def _exec_pallas(at, da, xb, key, *, cfg, m, n):
             p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
                                      method=cfg.denoise_method)
     return p
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
+def _exec_pallas(at, da, xb, key, *, cfg, m, n):
+    """Tier-1 via the fused Pallas EC kernel + tier-2 via the solver kernels
+    (see :func:`_pallas_corrected`); ``at``/``da`` are the dense padded
+    operands assembled once at first use and cached on the handle."""
+    return _pallas_corrected(at, da, xb, key, cfg, m, n, transpose=False)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "m", "n"))
 def _exec_pallas_t(at, da, yb, key, *, cfg, m, n):
-    """Transposed tier-1 via the same fused Pallas EC kernel read backwards.
+    """Transposed tier-1 via the same fused Pallas EC kernel read backwards
+    (one padded-operand cache on the handle serves both directions)."""
+    return _pallas_corrected(at, da, yb, key, cfg, m, n, transpose=True)
 
-    ``at``/``da`` are the dense padded operands shared with the forward path
-    (one cache on the handle serves both directions).  The kernel computes
-    ``z^T = y^T A_tilde + y_tilde^T dA`` in one call; the y DAC pass uses a
-    single whole-vector draw (fold 2 of the call key, keeping it distinct
-    from the forward path's fold 1 when a caller reuses a key across
-    directions) -- statistically identical to the per-block reference draws.
-    """
-    from repro.kernels import ops as kops
 
-    y_pad = jnp.pad(yb, ((0, at.shape[0] - yb.shape[0]), (0, 0)))
-    if cfg.encode_inputs:
-        y_t = crossbar._encode_vec(y_pad, jax.random.fold_in(key, 2), cfg)
-    else:
-        y_t = y_pad
-    if cfg.ec:
-        p = kops.rram_ec_matmul(y_pad.T, y_t.T, at, da).T[:n]
-    else:
-        p = (at.T @ y_t)[:n]
-    if cfg.ec:
-        if cfg.denoise_method == "neumann":
-            p = kops.denoise_stencil(p, lam=cfg.lam, h=cfg.h)
-        elif cfg.denoise_method == "thomas":
-            p = kops.denoise_thomas(p, lam=cfg.lam, h=cfg.h)
-        else:
-            p = denoise_least_square(p, lam=cfg.lam, h=cfg.h,
-                                     method=cfg.denoise_method)
-    return p
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n", "transpose"))
+def _exec_group_reference(at_g, da_g, xb_g, keys, *, cfg, m, n, transpose):
+    """Grouped execute: every member's corrected MVM in ONE dispatch (the
+    vmapped :func:`repro.core.crossbar.grouped_block_mvm` stage; member g
+    consumes ``keys[g]`` exactly as its solo execute would)."""
+    run = crossbar.grouped_block_rmvm if transpose \
+        else crossbar.grouped_block_mvm
+    return run(at_g, da_g, xb_g, keys, cfg, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n", "transpose"))
+def _exec_group_pallas(at_g, da_g, xb_g, keys, *, cfg, m, n, transpose):
+    """Grouped Pallas execute: ONE dispatch, one ``lax.map`` over members,
+    each running the fused whole-image EC kernel body with its own key --
+    member g's draws are identical to its solo :func:`_exec_pallas` call."""
+    def one(ops):
+        at, da, xb, k = ops
+        return _pallas_corrected(at, da, xb, k, cfg, m, n, transpose)
+
+    return jax.lax.map(one, (at_g, da_g, xb_g, keys))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "m", "n", "transpose"))
+def _exec_group_reference_aged(at_g, da_g, xb_g, keys, ages, *, cfg, m, n,
+                               transpose):
+    """Grouped AGED execute: one dispatch containing every member's aging
+    transform (drift + replayable stuck-at faults, per member ledger) AND the
+    grouped corrected MVM -- aging adds zero dispatches to a group exactly as
+    it adds zero to a solo handle (DESIGN.md section 12)."""
+    from repro.reliability.aging import aged_blocks
+    at_aged = jax.vmap(lambda at, age: aged_blocks(at, age, cfg.device))(
+        at_g, ages)
+    run = crossbar.grouped_block_rmvm if transpose \
+        else crossbar.grouped_block_mvm
+    return run(at_aged, da_g, xb_g, keys, cfg, m=m, n=n)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "m", "n", "activation",
+                                    "use_kernel"))
+def _exec_chain(at_g, da_g, x0, keys, *, cfg, m, n, activation, use_kernel):
+    """Whole-model chained forward: ONE ``lax.scan`` over the image axis
+    threads the activation through every member -- an L-layer analog MLP
+    forward is a single device dispatch.  Member g's corrected MVM consumes
+    ``keys[g]`` (the same per-block k_x halves as its solo execute); the
+    static ``activation`` from :data:`CHAIN_ACTIVATIONS` applies between
+    members."""
+    act = CHAIN_ACTIVATIONS[activation]
+
+    def body(x, ops):
+        at, da, k = ops
+        y = crossbar.programmed_block_mvm(at, da, x, k, cfg, m=m, n=n,
+                                          use_kernel=use_kernel)
+        return act(y), None
+
+    y, _ = jax.lax.scan(body, x0, (at_g, da_g, keys))
+    return y
 
 
 # Scan-fused streamed pipelines: the pure stages live in
@@ -712,6 +943,185 @@ class AnalogEngine:
         at_blocks, _ = crossbar.program_blocks(a, key, self.cfg)
         return _assemble(at_blocks, *a.shape)
 
+    # ------------------------------------------------------ group programming
+    def program_group(
+        self,
+        source,
+        key: jax.Array,
+        *,
+        shape: Optional[Tuple[int, int]] = None,
+    ) -> AnalogMatrixGroup:
+        """Program a whole stack of matrices as ONE grouped dispatch.
+
+        ``source`` is a pytree of same-shape 2-D arrays (list, dict, nested
+        -- the leaves stack in ``jax.tree_util`` leaf order), a single
+        pre-stacked (g, m, n) array, or -- under ``execution="streamed"`` --
+        a sequence of traceable ``block_fn(i, j)`` producers with
+        ``shape=(m, n)``.  Member ``g`` is programmed with
+        ``fold_in(key, g)`` and its image is bit-identical to a solo
+        ``program`` under that key; only the dispatch count changes (one
+        launch for the whole group instead of one per member).  Under
+        ``execution="distributed"`` the stack programs in one ``shard_map``
+        with each member block-sharded over the mesh.
+        """
+        leaves = jax.tree_util.tree_leaves(source)
+        if not leaves:
+            raise ValueError("program_group needs at least one member")
+        producers = [f for f in leaves
+                     if callable(f) and not hasattr(f, "shape")]
+        if producers and len(producers) != len(leaves):
+            raise ValueError(
+                "program_group members must be all arrays or all block_fn "
+                "producers, not a mix")
+        if producers:
+            return self._program_group_streamed(tuple(producers), key, shape)
+        if len(leaves) == 1 and getattr(leaves[0], "ndim", 0) == 3:
+            stack = jnp.asarray(leaves[0])
+        else:
+            shapes = sorted({tuple(getattr(l, "shape", ())) for l in leaves})
+            if len(shapes) != 1 or len(shapes[0]) != 2:
+                raise ValueError(
+                    "program_group needs geometry-compatible members: every "
+                    f"leaf must be the same 2-D (m, n) shape, got {shapes} "
+                    "(group same-shape kernels; program the rest solo)")
+            stack = jnp.stack([jnp.asarray(l) for l in leaves])
+        size, m, n = stack.shape
+        member_keys = jax.vmap(
+            lambda g: jax.random.fold_in(key, g))(jnp.arange(size))
+        if self.execution == "distributed":
+            return self._program_group_distributed(stack, key, member_keys)
+        at_g, da_g = jax.jit(functools.partial(
+            crossbar.group_program_blocks, cfg=self.cfg))(stack, member_keys)
+        stats = _scale_stats(crossbar.matrix_write_cost(m, n, self.cfg), size)
+        return AnalogMatrixGroup(
+            engine=self, size=size, shape=(m, n), base_key=key,
+            member_keys=member_keys, write_stats=stats,
+            at_blocks=at_g, da_blocks=da_g)
+
+    def _program_group_streamed(self, block_fns, key, shape
+                                ) -> AnalogMatrixGroup:
+        if self.execution == "distributed":
+            raise ValueError(
+                "program_group does not take producer groups under "
+                "execution='distributed' (one producer already scan-programs "
+                "the whole mesh); program members individually or use "
+                "execution='streamed'")
+        if self.execution != "streamed":
+            raise ValueError(
+                "a producer group requires execution='streamed'")
+        if shape is None:
+            raise ValueError(
+                "program_group(producers, ...) requires shape=(m, n)")
+        m, n = shape
+        cap_m, cap_n = self.cfg.geom.capacity
+        mb, nb = -(-m // cap_m), -(-n // cap_n)
+        for g, fn in enumerate(block_fns):
+            if not crossbar.producer_is_traceable(fn, cap_m, cap_n):
+                raise ValueError(
+                    f"group member {g}'s block_fn is not traceable: grouped "
+                    "streamed execution selects producers by lax.switch "
+                    "inside one scan, so every member must trace as a pure "
+                    "jax function of the index scalars (program opaque "
+                    "producers individually instead)")
+        size = len(block_fns)
+        member_keys = jax.vmap(
+            lambda g: jax.random.fold_in(key, g))(jnp.arange(size))
+        at_g = jax.jit(functools.partial(
+            crossbar.grouped_streamed_program_blocks, block_fns,
+            cfg=self.cfg, mb=mb, nb=nb))(member_keys)
+        stats = _scale_stats(crossbar.matrix_write_cost(m, n, self.cfg), size)
+        return AnalogMatrixGroup(
+            engine=self, size=size, shape=(m, n), base_key=key,
+            member_keys=member_keys, write_stats=stats,
+            at_blocks=at_g, block_fns=block_fns)
+
+    def _program_group_distributed(self, stack, key, member_keys
+                                   ) -> AnalogMatrixGroup:
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core import distributed as D
+        size, m, n = stack.shape
+        row_spec = self.row_axes if len(self.row_axes) > 1 else self.row_axes[0]
+        a_sh = jax.device_put(stack, NamedSharding(
+            self.mesh, PartitionSpec(None, row_spec, self.col_axis)))
+        prog = self._dist_mvm_cache.get("group_program")
+        if prog is None:
+            prog = jax.jit(D.make_distributed_group_program(
+                self.cfg, self.mesh, self.row_axes, self.col_axis))
+            self._dist_mvm_cache["group_program"] = prog
+        at_g, da_g, stats = prog(a_sh, member_keys)
+        return AnalogMatrixGroup(
+            engine=self, size=size, shape=(m, n), base_key=key,
+            member_keys=member_keys, write_stats=stats,
+            at_dense=at_g, da_dense=da_g, mesh_sharded=True)
+
+    def group(self, handles: Sequence[AnalogMatrix]) -> AnalogMatrixGroup:
+        """Stack already-programmed compatible handles into a group.
+
+        No re-programming: the members' images stack verbatim (member ``g``
+        of the group is bit-identical to ``handles[g]``), so grouped
+        execution of existing handles gives the single-dispatch pipeline for
+        free.  Members must share one engine configuration and one (m, n)
+        shape, hold resident LOCAL images (dense blocks, or all-streamed with
+        traceable producers), and carry no attached :class:`AgeLedger` --
+        attach ages to the GROUP via
+        :func:`repro.reliability.aging.attach_group_age` instead.
+        """
+        handles = list(handles)
+        if not handles:
+            raise ValueError("group() needs at least one handle")
+        shapes = sorted({h.shape for h in handles})
+        if len(shapes) != 1:
+            raise ValueError(
+                "group() members must be geometry-compatible (one shared "
+                f"(m, n) shape); got {shapes}")
+        for g, h in enumerate(handles):
+            if isinstance(h, TransposedAnalogMatrix):
+                raise ValueError(
+                    "group() stacks forward handles; run the transposed "
+                    "direction through group_rmvm")
+            if h.engine is not self and h.engine.cfg != self.cfg:
+                raise ValueError(
+                    f"group() member {g} was programmed by an incompatible "
+                    "engine configuration")
+            if h.mesh_sharded or h.at_dense is not None:
+                raise ValueError(
+                    "group() stacks local handles; distributed images group "
+                    "at program time via program_group")
+            if h.at_blocks is None:
+                raise ValueError(
+                    f"group() member {g} holds no resident image "
+                    "(resident=False handles cannot be grouped)")
+            if h.age is not None:
+                raise ValueError(
+                    f"group() member {g} has an AgeLedger attached; group "
+                    "first, then age the group via attach_group_age")
+        streamed = [h.da_blocks is None for h in handles]
+        if any(streamed):
+            if not all(streamed):
+                raise ValueError(
+                    "group() members must be all dense or all streamed")
+            if not all(h.block_traceable for h in handles):
+                raise ValueError(
+                    "grouped streamed execution requires every member's "
+                    "producer to be traceable")
+            block_fns = tuple(h.block_fn for h in handles)
+            da_g = None
+        else:
+            block_fns = None
+            da_g = jnp.stack([h.da_blocks for h in handles])
+        at_g = jnp.stack([h.at_blocks for h in handles])
+        member_keys = jnp.stack([h.base_key for h in handles])
+        total = WriteStats(
+            energy_j=sum(h.write_stats.energy_j for h in handles),
+            latency_s=sum(h.write_stats.latency_s for h in handles),
+            iterations=handles[0].write_stats.iterations,
+            final_delta=max(h.write_stats.final_delta for h in handles))
+        return AnalogMatrixGroup(
+            engine=self, size=len(handles), shape=handles[0].shape,
+            base_key=handles[0].base_key, member_keys=member_keys,
+            write_stats=total, at_blocks=at_g, da_blocks=da_g,
+            block_fns=block_fns)
+
     # --------------------------------------------------------------- execution
     def mvm(self, A: AnalogMatrix, x: jnp.ndarray, *,
             key: Optional[jax.Array] = None) -> jnp.ndarray:
@@ -753,6 +1163,216 @@ class AnalogEngine:
         """Like :meth:`rmvm` but also returns this call's input-write cost."""
         return self._execute(A, y, key, with_stats=True, transpose=True)
 
+    # --------------------------------------------------------- group execution
+    def group_mvm(self, G: AnalogMatrixGroup, x: jnp.ndarray, *,
+                  key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Corrected MVM of EVERY group member in one device dispatch.
+
+        ``x`` broadcasts or distributes over the image axis:
+
+        * ``(n,)`` / ``(n, batch)`` -- the same input to every member;
+        * ``(size, n)`` / ``(size, n, batch)`` -- one input per member
+          (a shape that is both -- square ``size == n`` 2-D input --
+          resolves per-member).
+
+        Returns ``(size, m)`` / ``(size, m, batch)``.  ``key`` seeds member
+        ``g``'s DAC draws with ``fold_in(key, g)``; by default successive
+        calls consume per-member folds of ``member_keys`` -- member ``g``'s
+        call ``c`` draws match a solo handle's call ``c`` exactly.
+        """
+        y, _ = self._group_execute(G, x, key)
+        return y
+
+    def group_mvm_with_stats(self, G: AnalogMatrixGroup, x: jnp.ndarray, *,
+                             key: Optional[jax.Array] = None
+                             ) -> Tuple[jnp.ndarray, WriteStats]:
+        """Like :meth:`group_mvm` plus the whole group's input-write cost."""
+        return self._group_execute(G, x, key, with_stats=True)
+
+    def group_rmvm(self, G: AnalogMatrixGroup, y: jnp.ndarray, *,
+                   key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Corrected TRANSPOSED MVM of every member in one dispatch
+        (``A_g.T @ y_g`` against the same stacked image; ``y``: ``(m,)``,
+        ``(m, batch)``, ``(size, m)`` or ``(size, m, batch)``)."""
+        z, _ = self._group_execute(G, y, key, transpose=True)
+        return z
+
+    def group_rmvm_with_stats(self, G: AnalogMatrixGroup, y: jnp.ndarray, *,
+                              key: Optional[jax.Array] = None
+                              ) -> Tuple[jnp.ndarray, WriteStats]:
+        """Like :meth:`group_rmvm` plus the group's input-write cost."""
+        return self._group_execute(G, y, key, with_stats=True, transpose=True)
+
+    def chain_mvm(self, G: AnalogMatrixGroup, x: jnp.ndarray, *,
+                  key: Optional[jax.Array] = None,
+                  activation: Optional[str] = None) -> jnp.ndarray:
+        """Whole-model CHAINED forward in one dispatch: member 0's output
+        feeds member 1's input and so on -- an L-layer analog forward pass is
+        a single ``lax.scan`` launch.  Members must be square (``m == n``);
+        ``activation`` (a :data:`CHAIN_ACTIVATIONS` name or None) applies
+        between members inside the same dispatch.  ``x``: (n,) or (n, batch).
+        """
+        if isinstance(G, AnalogMatrix):
+            raise TypeError("chain_mvm takes an AnalogMatrixGroup; wrap solo "
+                            "handles with engine.group([...])")
+        if G.m != G.n:
+            raise ValueError(
+                f"chain_mvm threads each member's output into the next, so "
+                f"members must be square; the group is {G.m} x {G.n}")
+        if activation not in CHAIN_ACTIVATIONS:
+            names = sorted(k for k in CHAIN_ACTIVATIONS if k is not None)
+            raise ValueError(
+                f"unknown chain activation {activation!r}; expected None or "
+                f"one of {names}")
+        if G.at_blocks is None or G.da_blocks is None:
+            raise ValueError(
+                "chain_mvm needs a LOCAL resident group (dense members with "
+                "stacked at/da blocks)")
+        if G.ages is not None:
+            raise ValueError("chain_mvm does not apply attached ages; "
+                             "detach them or use group_mvm")
+        squeeze = x.ndim == 1
+        xb = x[:, None] if squeeze else x
+        if xb.shape[0] != G.n:
+            raise ValueError(
+                f"chain_mvm: input has {xb.shape[0]} rows but the members "
+                f"are {G.m} x {G.n}")
+        keys = self._group_keys(G, key)
+        G.calls += 1
+        use_kernel = self.backend == "pallas" and self.cfg.ec
+        y = _exec_chain(G.at_blocks, G.da_blocks, xb, keys, cfg=self.cfg,
+                        m=G.m, n=G.n, activation=activation,
+                        use_kernel=use_kernel)
+        return y[:, 0] if squeeze else y
+
+    def _group_keys(self, G: AnalogMatrixGroup, key) -> jax.Array:
+        """Per-member execute keys: explicit ``key`` fans out as
+        ``fold_in(key, g)``; the default schedule folds each member's base
+        key by the call counter, matching the solo per-handle schedule
+        draw-for-draw."""
+        if key is not None:
+            return jax.vmap(lambda g: jax.random.fold_in(key, g))(
+                jnp.arange(G.size))
+        if not getattr(jax.core, "trace_state_clean", lambda: True)():
+            raise ValueError(
+                "engine.group_mvm inside jit needs an explicit key= (the "
+                "default call-counter key schedule is host-side state)")
+        if G.calls == 0:
+            return G.member_keys
+        return jax.vmap(lambda k: jax.random.fold_in(k, G.calls))(
+            G.member_keys)
+
+    def _group_input(self, G, x, transpose):
+        """Normalize group input to (size, contraction, batch) + output mode."""
+        contraction = G.m if transpose else G.n
+        direction = "G.T @ y" if transpose else "G @ x"
+        if x.ndim == 1:
+            if x.shape[0] != contraction:
+                raise ValueError(
+                    f"{direction}: input has {x.shape[0]} rows but members "
+                    f"are {G.m} x {G.n}")
+            return jnp.broadcast_to(x[None, :, None],
+                                    (G.size, contraction, 1)), True
+        if x.ndim == 2:
+            if x.shape == (G.size, contraction):
+                return x[:, :, None], True
+            if x.shape[0] == contraction:
+                return jnp.broadcast_to(x[None], (G.size,) + x.shape), False
+            raise ValueError(
+                f"{direction}: 2-D input must be ({contraction}, batch) or "
+                f"(size={G.size}, {contraction}); got {x.shape}")
+        if x.ndim == 3:
+            if x.shape[0] != G.size or x.shape[1] != contraction:
+                raise ValueError(
+                    f"{direction}: 3-D input must be (size={G.size}, "
+                    f"{contraction}, batch); got {x.shape}")
+            return x, False
+        raise ValueError(f"{direction}: input must be 1-, 2- or 3-D")
+
+    def _group_execute(self, G, x, key, with_stats=False, transpose=False):
+        if not isinstance(G, AnalogMatrixGroup):
+            raise TypeError("group_mvm takes an AnalogMatrixGroup; use "
+                            "engine.mvm for solo handles")
+        if G.engine is not self and G.engine.cfg != self.cfg:
+            raise ValueError("AnalogMatrixGroup was programmed by an "
+                             "incompatible engine configuration")
+        if self.execution == "distributed":
+            if G.at_dense is None:
+                raise ValueError(
+                    "this engine executes distributed but the group holds "
+                    "block tiles; build it with the distributed engine's "
+                    "program_group")
+        elif G.at_blocks is None:
+            raise ValueError(
+                "the group holds mesh-sharded operands but this engine "
+                f"executes {self.execution!r}; build it with this engine")
+        xb, squeeze = self._group_input(G, x, transpose)
+        keys = self._group_keys(G, key)
+        G.calls += 1
+        m, n = G.shape
+        batch = xb.shape[2]
+        stats = None
+        if self.execution == "distributed":
+            p, stats = self._group_dist_exec(transpose)(
+                G.at_dense, G.da_dense, xb, keys)
+        elif G.ages is not None:
+            if self.backend != "reference" or G.da_blocks is None:
+                raise ValueError(
+                    "aged group execution needs execution='local', "
+                    "backend='reference' and resident da blocks")
+            p = _exec_group_reference_aged(
+                G.at_blocks, G.da_blocks, xb, keys, G.ages,
+                cfg=self.cfg, m=m, n=n, transpose=transpose)
+            if getattr(jax.core, "trace_state_clean", lambda: True)():
+                G.ages = G.ages.advanced(1)
+        elif G.da_blocks is None:
+            # Streamed group: dA re-derived per block from each member's
+            # producer inside one grouped scan pipeline.
+            use_kernel = self.backend == "pallas" and self.cfg.ec
+            cache = _scan_cache(G)
+            cache_key = (use_kernel, transpose, batch)
+            fn = cache.get(cache_key)
+            if fn is None:
+                stage = crossbar.grouped_streamed_block_rmvm if transpose \
+                    else crossbar.grouped_streamed_block_mvm
+                fn = jax.jit(functools.partial(
+                    stage, G.block_fns,
+                    cfg=self.cfg, m=m, n=n, use_kernel=use_kernel))
+                cache.put(cache_key, fn)
+            p = fn(G.at_blocks, xb, keys)
+        elif self.backend == "pallas":
+            padded = G._padded
+            if padded is None:
+                _, mb, nb, cm, cn = G.at_blocks.shape
+                asm = jax.vmap(
+                    functools.partial(_assemble, m=mb * cm, n=nb * cn))
+                padded = (asm(G.at_blocks), asm(G.da_blocks))
+                if getattr(jax.core, "trace_state_clean", lambda: False)():
+                    G._padded = padded
+            p = _exec_group_pallas(*padded, xb, keys, cfg=self.cfg,
+                                   m=m, n=n, transpose=transpose)
+        else:
+            p = _exec_group_reference(G.at_blocks, G.da_blocks, xb, keys,
+                                      cfg=self.cfg, m=m, n=n,
+                                      transpose=transpose)
+        if with_stats and stats is None:
+            stats = G.input_write_stats(batch, transpose=transpose)
+        return (p[:, :, 0] if squeeze else p), stats
+
+    def _group_dist_exec(self, transpose: bool = False):
+        """The jitted shard_map'd GROUP execute stage for this backend."""
+        use_kernel = self._dist_use_kernel()
+        fn = self._dist_mvm_cache.get(("group", use_kernel, transpose))
+        if fn is None:
+            from repro.core import distributed as D
+            make = D.make_distributed_group_rmvm if transpose else \
+                D.make_distributed_group_mvm
+            fn = jax.jit(make(
+                self.cfg, self.mesh, self.row_axes, self.col_axis,
+                use_kernel=use_kernel))
+            self._dist_mvm_cache[("group", use_kernel, transpose)] = fn
+        return fn
+
     # ------------------------------------------------------- analysis hooks
     def mvm_fn(self, A: AnalogMatrix, *, transpose: bool = False):
         """Traceable ``(vec, key) -> out`` closure over a programmed handle.
@@ -766,6 +1386,21 @@ class AnalogEngine:
         if transpose:
             return lambda y, key: self.rmvm(A, y, key=key)
         return lambda x, key: self.mvm(A, x, key=key)
+
+    def group_mvm_fn(self, G: AnalogMatrixGroup, *, transpose: bool = False):
+        """Traceable ``(vec, key) -> out`` closure over a grouped handle --
+        the :meth:`mvm_fn` analogue the invariant registry traces to pin the
+        whole group to ONE top-level dispatch."""
+        if transpose:
+            return lambda y, key: self.group_rmvm(G, y, key=key)
+        return lambda x, key: self.group_mvm(G, x, key=key)
+
+    def chain_fn(self, G: AnalogMatrixGroup, *,
+                 activation: Optional[str] = None):
+        """Traceable closure over the chained whole-model forward
+        (:meth:`chain_mvm`)."""
+        return lambda x, key: self.chain_mvm(G, x, key=key,
+                                             activation=activation)
 
     @property
     def collective_axes(self) -> Tuple[str, ...]:
@@ -794,6 +1429,9 @@ class AnalogEngine:
                                          transpose=transpose)
 
     def _execute(self, A, x, key, with_stats=False, transpose=False):
+        if isinstance(A, AnalogMatrixGroup):
+            raise TypeError("engine.mvm/rmvm take a solo AnalogMatrix; "
+                            "use engine.group_mvm/group_rmvm for groups")
         if isinstance(A, TransposedAnalogMatrix):
             # A transposed view executes as the opposite direction of its
             # parent: (A.T).T @ x is a forward MVM of the parent.  The same
@@ -919,21 +1557,22 @@ class AnalogEngine:
         m, n = A.shape
         use_kernel = self.backend == "pallas" and cfg.ec
         if A.block_traceable:
-            cache_key = (use_kernel, transpose)
-            fn = (A._scan_exec or {}).get(cache_key)
+            # Bounded LRU keyed INCLUDING the batch size: each jit object
+            # holds exactly one compiled batch bucket, so a long-lived
+            # serving handle cycling through buckets keeps at most
+            # SCAN_CACHE_MAX live executables (eviction drops the jit object
+            # and every trace inside it) instead of growing per
+            # (backend, direction, batch) without bound.
+            cache = _scan_cache(A)
+            cache_key = (use_kernel, transpose, xb.shape[1])
+            fn = cache.get(cache_key)
             if fn is None:
-                # Jitted once per handle (per backend and direction): warm
-                # MVMs are cache hits with zero host-side producer work, and
-                # the trace is released with the handle rather than pinned
-                # process-wide.
                 stage = crossbar.streamed_block_rmvm if transpose \
                     else crossbar.streamed_block_mvm
                 fn = jax.jit(functools.partial(
                     stage, A.block_fn,
                     cfg=cfg, m=m, n=n, use_kernel=use_kernel))
-                if A._scan_exec is None:
-                    A._scan_exec = {}
-                A._scan_exec[cache_key] = fn
+                cache.put(cache_key, fn)
             return fn(A.at_blocks, xb, key)
         return self._exec_streamed_host(A, xb, key, use_kernel, transpose)
 
@@ -946,8 +1585,10 @@ class AnalogEngine:
         The jitted shard_map pipeline is cached on the handle per backend
         and direction, so solver loops re-enter a warm trace."""
         use_kernel = self._dist_use_kernel()
-        cache_key = ("dist", use_kernel, A.at_blocks is not None, transpose)
-        fn = (A._scan_exec or {}).get(cache_key)
+        cache = _scan_cache(A)
+        cache_key = ("dist", use_kernel, A.at_blocks is not None, transpose,
+                     xb.shape[1])
+        fn = cache.get(cache_key)
         if fn is None:
             from repro.core import distributed as D
             m, n = A.shape
@@ -958,9 +1599,7 @@ class AnalogEngine:
                 A.block_fn, self.cfg, self.mesh, self.row_axes, self.col_axis,
                 m=m, n=n, mb=mb, nb=nb, resident=A.at_blocks is not None,
                 use_kernel=use_kernel))
-            if A._scan_exec is None:
-                A._scan_exec = {}
-            A._scan_exec[cache_key] = fn
+            cache.put(cache_key, fn)
         if A.at_blocks is not None:
             return fn(A.at_blocks, xb, key)
         return fn(xb, key)

@@ -26,6 +26,8 @@ __all__ = [
     "rram_ec_matmul",
     "rram_ec_tile_mvm",
     "rram_ec_tile_rmvm",
+    "rram_ec_group_mvm",
+    "rram_ec_group_rmvm",
     "denoise_thomas",
     "denoise_stencil",
     "solver_richardson_update",
@@ -143,6 +145,49 @@ def rram_ec_tile_rmvm(
     """
     return rram_ec_matmul(y_blk.T, y_t.T, at_blk, da_blk,
                           interpret=interpret).T
+
+
+def rram_ec_group_mvm(
+    x_g: jnp.ndarray,
+    x_t_g: jnp.ndarray,
+    at_g: jnp.ndarray,
+    da_g: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Tier-1 EC step for a STACK of images under an extra leading image axis.
+
+    All operands carry a leading group axis ``g``: ``x_g``/``x_t_g`` are
+    (g, n, batch) input panels, ``at_g``/``da_g`` (g, m, n) dense operands.
+    Runs the fused :func:`rram_ec_matmul` kernel once per member inside a
+    single ``lax.map`` (a scan -- ONE traced program, the kernel grid never
+    sees the image axis), returning (g, m, batch).  Member ``g`` is
+    bit-identical to a solo :func:`rram_ec_tile_mvm` on its slice.
+    """
+    def one(ops):
+        x, x_t, at, da = ops
+        return rram_ec_tile_mvm(x, x_t, at, da, interpret=interpret)
+
+    return jax.lax.map(one, (x_g, x_t_g, at_g, da_g))
+
+
+def rram_ec_group_rmvm(
+    y_g: jnp.ndarray,
+    y_t_g: jnp.ndarray,
+    at_g: jnp.ndarray,
+    da_g: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """TRANSPOSED grouped tier-1 EC step: the :func:`rram_ec_tile_rmvm`
+    mirror of :func:`rram_ec_group_mvm`.  ``y_g``/``y_t_g`` are (g, m, batch),
+    ``at_g``/``da_g`` (g, m, n); returns (g, n, batch) -- the same kernel read
+    backwards per member under one ``lax.map``."""
+    def one(ops):
+        y, y_t, at, da = ops
+        return rram_ec_tile_rmvm(y, y_t, at, da, interpret=interpret)
+
+    return jax.lax.map(one, (y_g, y_t_g, at_g, da_g))
 
 
 def solver_richardson_update(

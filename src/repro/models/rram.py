@@ -33,9 +33,10 @@ from repro.core.write_verify import WriteStats
 from repro.engine import AnalogEngine
 from .params import is_spec, spec
 
-__all__ = ["program_rram", "program_specs", "crossbar_cfg", "is_programmed",
-           "strip_rram", "reprogram_rram", "analog_image_bytes",
-           "programmed_kernel_shapes", "forward_input_stats"]
+__all__ = ["program_rram", "program_specs", "programming_dispatch_plan",
+           "crossbar_cfg", "is_programmed", "strip_rram", "reprogram_rram",
+           "analog_image_bytes", "programmed_kernel_shapes",
+           "forward_input_stats"]
 
 
 def crossbar_cfg(cfg: RRAMBackendConfig) -> CrossbarConfig:
@@ -55,22 +56,35 @@ def program_rram(
     key: jax.Array,
     *,
     engine: Optional[AnalogEngine] = None,
+    group: bool = True,
 ) -> Tuple[Any, WriteStats]:
     """Return (programmed params, total write stats).
 
-    A pytree walk of ``engine.program``: each kernel is written onto the
-    analog engine exactly once; the dense ``w_tilde``/``dw`` operands the
-    layers consume are views of the programmed image.  Works on real or
-    stacked (scan-over-layers) kernels: a kernel of shape (L, d_in, d_out) is
-    encoded per layer via vmap over ``engine.encode_dense`` (each layer maps
-    onto its own set of MCA tiles)."""
+    A pytree walk of the engine's programming stage: each kernel is written
+    onto the analog engine exactly once; the dense ``w_tilde``/``dw``
+    operands the layers consume are views of the programmed image.  Works on
+    real or stacked (scan-over-layers) kernels: a kernel of shape
+    (L, d_in, d_out) is encoded per layer (each layer maps onto its own set
+    of MCA tiles).
+
+    ``group=True`` (the default) programs all same-shape kernels of the walk
+    as ONE grouped dispatch each (the :class:`~repro.engine.AnalogMatrixGroup`
+    batching applied to programming): a whole model writes in
+    O(distinct kernel shapes) device launches instead of O(kernels).  Each
+    kernel keeps the exact per-kernel key of the ungrouped walk (fold
+    ``counter`` of ``key``), so every draw is the same random variate under
+    either setting; images agree to float32 rounding (~1e-7 -- XLA may
+    reassociate the fused encode differently than the eager per-kernel
+    path), and the dispatch count drops from O(kernels) to
+    O(distinct shapes) (see :func:`programming_dispatch_plan`).
+    """
     engine = engine or AnalogEngine(crossbar_cfg(cfg))
     ccfg = engine.cfg
     total = WriteStats.zero()
     counter = [0]
+    jobs = []       # (slot dict, kernel, per-kernel key) in walk order
 
     def visit(tree):
-        nonlocal total
         if not isinstance(tree, dict):
             return tree
         out = {}
@@ -78,30 +92,89 @@ def program_rram(
             if name == "w" and hasattr(sub, "ndim") and sub.ndim in (2, 3):
                 counter[0] += 1
                 k = jax.random.fold_in(key, counter[0])
-                if sub.ndim == 2:
-                    handle = engine.program(sub.astype(jnp.float32), k)
-                    wt = handle.a_tilde
-                    total = total + handle.write_stats
-                else:  # stacked layers
-                    keys = jax.random.split(k, sub.shape[0])
-                    wt = jax.vmap(engine.encode_dense)(
-                        sub.astype(jnp.float32), keys)
-                    per = matrix_write_cost(sub.shape[1], sub.shape[2], ccfg)
-                    total = total + WriteStats(
-                        energy_j=per.energy_j * sub.shape[0],
-                        latency_s=per.latency_s * sub.shape[0],
-                        iterations=per.iterations,
-                        final_delta=per.final_delta)
                 out[name] = sub
-                out["w_tilde"] = wt.astype(sub.dtype)
-                out["dw"] = (sub.astype(jnp.float32) - wt).astype(cfg.dw_dtype)
+                out["w_tilde"] = None
+                out["dw"] = None
+                jobs.append((out, sub, k))
             elif isinstance(sub, dict):
                 out[name] = visit(sub)
             else:
                 out[name] = sub
         return out
 
-    return visit(params), total
+    tree = visit(params)
+
+    def per_layer_stats(m, n, layers):
+        per = matrix_write_cost(m, n, ccfg)
+        return WriteStats(
+            energy_j=per.energy_j * layers, latency_s=per.latency_s * layers,
+            iterations=per.iterations, final_delta=per.final_delta)
+
+    def fill(slot, sub, wt):
+        slot["w_tilde"] = wt.astype(sub.dtype)
+        slot["dw"] = (sub.astype(jnp.float32) - wt).astype(cfg.dw_dtype)
+
+    if not group:
+        for slot, sub, k in jobs:
+            if sub.ndim == 2:
+                handle = engine.program(sub.astype(jnp.float32), k)
+                wt = handle.a_tilde
+                total = total + handle.write_stats
+            else:
+                keys = jax.random.split(k, sub.shape[0])
+                wt = jax.vmap(engine.encode_dense)(
+                    sub.astype(jnp.float32), keys)
+                total = total + per_layer_stats(sub.shape[1], sub.shape[2],
+                                                sub.shape[0])
+            fill(slot, sub, wt)
+        return tree, total
+
+    # Grouped programming: bucket the walk by (ndim, shape) and encode each
+    # bucket's kernels as one stacked dispatch.  Stacked (L, m, n) kernels
+    # keep their per-layer split keys, 2-D kernels their per-kernel fold --
+    # member draws match the ungrouped walk exactly.
+    buckets: Dict[Tuple, list] = {}
+    for job in jobs:
+        sub = job[1]
+        buckets.setdefault((sub.ndim,) + tuple(sub.shape), []).append(job)
+    for bkey, bjobs in buckets.items():   # insertion order == walk order
+        stack = jnp.stack([j[1].astype(jnp.float32) for j in bjobs])
+        if bkey[0] == 2:
+            keys = jnp.stack([j[2] for j in bjobs])
+            wts = jax.jit(jax.vmap(engine.encode_dense))(stack, keys)
+            m, n = bkey[1:]
+            total = total + per_layer_stats(m, n, len(bjobs))
+        else:
+            layers, m, n = bkey[1:]
+            keys = jnp.stack([jax.random.split(j[2], layers) for j in bjobs])
+            wts = jax.jit(jax.vmap(jax.vmap(engine.encode_dense)))(stack,
+                                                                   keys)
+            total = total + per_layer_stats(m, n, len(bjobs) * layers)
+        for (slot, sub, _), wt in zip(bjobs, wts):
+            fill(slot, sub, wt)
+    return tree, total
+
+
+def programming_dispatch_plan(params: Any) -> Dict[str, int]:
+    """Dispatch accounting of one :func:`program_rram` walk over ``params``.
+
+    ``kernels`` is how many programmed kernels the walk visits (the ungrouped
+    dispatch count); ``groups`` how many distinct (ndim, shape) buckets they
+    collapse into (the grouped dispatch count).  Pure shape math -- works on
+    programmed or digital trees."""
+    shapes = []
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            for name, sub in tree.items():
+                if name == "w" and hasattr(sub, "ndim") and \
+                        sub.ndim in (2, 3):
+                    shapes.append((sub.ndim,) + tuple(sub.shape))
+                elif isinstance(sub, dict):
+                    visit(sub)
+
+    visit(params)
+    return {"kernels": len(shapes), "groups": len(set(shapes))}
 
 
 def is_programmed(params: Any) -> bool:

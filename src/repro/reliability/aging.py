@@ -39,8 +39,8 @@ from repro.core import crossbar
 from repro.core.devices import (DeviceModel, drift_factor, drift_factor_py,
                                 effective_sigma_py)
 
-__all__ = ["AgeLedger", "attach_age", "aged_blocks", "fault_probability",
-           "predicted_residual", "FAULT_SALT"]
+__all__ = ["AgeLedger", "attach_age", "attach_group_age", "aged_blocks",
+           "fault_probability", "predicted_residual", "FAULT_SALT"]
 
 #: fold_in salt separating the fault-process key stream from the programming
 #: (k_a) and input-DAC (k_x) streams derived from the same base key.
@@ -113,6 +113,26 @@ def attach_age(A) -> "AgeLedger":
     mb, nb = A.at_blocks.shape[:2]
     A.age = AgeLedger.fresh(A.base_key, mb, nb)
     return A.age
+
+
+def attach_group_age(G) -> "AgeLedger":
+    """Attach a stacked :class:`AgeLedger` to an AnalogMatrixGroup.
+
+    One ledger per member, stacked along the leading image axis (every field
+    gains a ``(size,)`` lead dim), each seeded from its member's OWN base key
+    -- member ``g``'s fault draws are bit-identical to a solo handle aged
+    from ``member_keys[g]``.  The grouped execute applies all ``size`` aging
+    transforms inside its single dispatch and advances every member's counts
+    together.  Local dense groups only, like :func:`attach_age`.
+    """
+    if G.at_blocks is None or G.da_blocks is None or G.mesh_sharded:
+        raise ValueError(
+            "attach_group_age needs a local group with resident at/da "
+            "blocks; streamed and distributed groups age via host-side "
+            "injection")
+    mb, nb = G.at_blocks.shape[1:3]
+    G.ages = jax.vmap(lambda k: AgeLedger.fresh(k, mb, nb))(G.member_keys)
+    return G.ages
 
 
 def fault_probability(device: DeviceModel, mvms) -> jnp.ndarray:

@@ -83,6 +83,12 @@ class MetricsAccumulator:
         self.padded_tokens = 0
         self.useful_tokens = 0
         self.n_batches = 0
+        # device-dispatch accounting: execution launches (prefill + fused
+        # decode per batch -- O(1), not O(layers)) and one-time programming
+        # launches (grouped program_rram: O(distinct kernel shapes) per
+        # build, not O(kernels)).
+        self.exec_dispatches = 0
+        self.program_dispatches = 0
         # device-lifetime reliability (repro.reliability): populated only
         # when the simulator runs with a ReliabilityConfig.
         self.refreshes = 0
@@ -91,11 +97,16 @@ class MetricsAccumulator:
         self.predicted_residuals: List[float] = []
 
     def add_batch(self, energy_j: float, useful_tokens: int,
-                  padded_tokens: int) -> None:
+                  padded_tokens: int, dispatches: int = 0) -> None:
         self.exec_energy_j += float(energy_j)
         self.useful_tokens += int(useful_tokens)
         self.padded_tokens += int(padded_tokens)
         self.n_batches += 1
+        self.exec_dispatches += int(dispatches)
+
+    def add_program_dispatches(self, dispatches: int) -> None:
+        """One (re)program's device-launch count (a cache-miss build)."""
+        self.program_dispatches += int(dispatches)
 
     def add_record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
@@ -136,6 +147,10 @@ class MetricsAccumulator:
             "write_energy_j": write_j,
             "total_energy_j": total_j,
             "joules_per_token": total_j / useful,
+            "exec_dispatches": self.exec_dispatches,
+            "dispatches_per_batch": (self.exec_dispatches
+                                     / max(self.n_batches, 1)),
+            "program_dispatches": self.program_dispatches,
         }
         if cache_stats:
             out["cache"] = dict(cache_stats)

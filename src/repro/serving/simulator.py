@@ -266,6 +266,7 @@ def simulate(cfg: ServingConfig) -> SimResult:
             # reprogramming stalls the engine for the write-verify latency
             now += float(outcome.write_stats.latency_s)
             fleet.note_programmed(batch.tenant, now)
+            metrics.add_program_dispatches(server.program_dispatches)
         elif outcome is not None and cfg.reliability is not None:
             # resident image: check analytic health before serving from it
             if fleet.aging_excess(batch.tenant, now) \
@@ -304,7 +305,9 @@ def simulate(cfg: ServingConfig) -> SimResult:
         exec_j = pre_j + step_j * batch.decode_bucket
         useful = batch.useful_prompt_tokens + batch.useful_decode_tokens
         padded = batch.padded_prompt_tokens + batch.padded_decode_tokens
-        metrics.add_batch(exec_j, useful, padded)
+        metrics.add_batch(exec_j, useful, padded,
+                          dispatches=server.dispatches_per_batch(
+                              batch.decode_bucket))
 
         for r in batch.requests:
             r_useful = r.prompt_len + r.decode_len

@@ -30,9 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.engine import AnalogEngine
+from repro.engine import AnalogEngine, _BoundedCache
 from repro.models.common import Runtime
-from repro.models.rram import crossbar_cfg, is_programmed, program_rram
+from repro.models.rram import crossbar_cfg, is_programmed, program_rram, \
+    programming_dispatch_plan
 
 __all__ = ["Server", "greedy_generate"]
 
@@ -62,13 +63,22 @@ class Server:
         self.rt = self.rt or Runtime()
         if self.key is None:
             self.key = jax.random.PRNGKey(7)
+        # programming dispatches this construction actually paid: 0 for a
+        # cache hit (already-programmed params) or the digital baseline,
+        # O(distinct kernel shapes) for the grouped program_rram walk.
+        self.program_dispatches = 0
         if self.rt.rram is not None and self.rt.rram.enabled:
             self.engine = self.engine or AnalogEngine(crossbar_cfg(self.rt.rram))
             if not is_programmed(self.params):
                 self.params, self.write_stats = program_rram(
                     self.params, self.rt.rram, self.key, engine=self.engine)
+                self.program_dispatches = \
+                    programming_dispatch_plan(self.params)["groups"]
         self._prefill = jax.jit(self._prefill_fn)
-        self._decode = {}     # jitted fused decode scans, keyed by n_tokens
+        # jitted fused decode scans keyed by n_tokens: a bounded LRU (one
+        # compiled executable per bucket), so a long-lived server cycling
+        # through many decode buckets holds a fixed number of pipelines.
+        self._decode = _BoundedCache()
 
     def _rt_for(self, key: jax.Array) -> Runtime:
         """A fresh Runtime carrying ``key`` (``key`` may be a tracer)."""
@@ -117,8 +127,14 @@ class Server:
             return toks.T, caches           # (B, n)
 
         fn = jax.jit(run)
-        self._decode[n] = fn
+        self._decode.put(n, fn)
         return fn
+
+    def dispatches_per_batch(self, n_tokens: int) -> int:
+        """Device dispatches one ``generate`` call costs: one jitted prefill
+        plus (for ``n_tokens > 1``) ONE fused decode scan -- O(1) in both the
+        token count and the model's layer count."""
+        return 1 if n_tokens == 1 else 2
 
     def prefill(self, batch: Dict) -> Tuple[jnp.ndarray, Any]:
         """One jitted prefill dispatch: (first token (B, 1), caches)."""

@@ -1,0 +1,391 @@
+"""AnalogMatrixGroup: whole-model single-dispatch execution tests.
+
+Covers the grouped-execution acceptance criteria: grouped member g is
+draw-identical to a solo handle programmed under ``fold_in(key, g)`` across
+reference/pallas x local/streamed placements (and bit-identical grouped vs
+solo WITHIN the distributed path on a 1x1 mesh), grouped MoE experts equal
+stacked solo experts, the chained whole-model forward matches the per-layer
+loop and traces to ONE top-level dispatch, per-member AgeLedger advancement
+matches solo aging, the ``_scan_exec`` pipeline caches stay bounded under
+bucket churn, and grouped ``program_rram`` agrees with the ungrouped walk
+while collapsing the dispatch plan to distinct kernel shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import dispatch_count, trace
+from repro.core import (CrossbarConfig, MCAGeometry, get_device, rel_l2)
+from repro.engine import (SCAN_CACHE_MAX, AnalogEngine, AnalogMatrixGroup,
+                          _BoundedCache)
+from repro.reliability.aging import attach_age, attach_group_age
+
+KEY = jax.random.PRNGKey(7)
+GEOM = MCAGeometry(tile_rows=2, tile_cols=2, cell_rows=32, cell_cols=32)
+SIZE = 3
+
+
+def make_cfg(**kw):
+    base = dict(device=get_device("taox-hfox"), geom=GEOM, k_iters=5, ec=True)
+    base.update(kw)
+    return CrossbarConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def stack():
+    """SIZE same-geometry member matrices + a shared input vector."""
+    a = jax.random.normal(KEY, (SIZE, 100, 90)) / 10
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (90,))
+    y = jax.random.normal(jax.random.fold_in(KEY, 2), (100,))
+    return a, x, y
+
+
+def _member_keys(key, size=SIZE):
+    return [jax.random.fold_in(key, g) for g in range(size)]
+
+
+def _solo_handles(engine, a, key):
+    return [engine.program(a[g], k) for g, k in enumerate(_member_keys(key))]
+
+
+# ------------------------------------------------------------- programming
+def test_program_group_matches_solo_program(stack):
+    """program_group member g draws the same random variates a solo program
+    under fold_in(key, g) draws; images agree to float32 rounding (the one
+    fused vmapped encode may be reassociated differently by XLA than the
+    eager per-member path -- same contract as grouped program_rram)."""
+    a, _, _ = stack
+    engine = AnalogEngine(make_cfg())
+    G = engine.program_group(a, KEY)
+    assert isinstance(G, AnalogMatrixGroup)
+    assert G.size == SIZE and G.shape == (100, 90)
+    for g, A in enumerate(_solo_handles(engine, a, KEY)):
+        np.testing.assert_allclose(np.asarray(G.at_blocks[g]),
+                                   np.asarray(A.at_blocks), atol=1e-5, rtol=0)
+        np.testing.assert_allclose(np.asarray(G.da_blocks[g]),
+                                   np.asarray(A.da_blocks), atol=1e-5, rtol=0)
+
+
+def test_group_of_handles_equals_program_group(stack):
+    """engine.group(handles) stacks the existing images EXACTLY (zero
+    re-encode work); program_group's fused encode agrees to f32 rounding."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    handles = _solo_handles(engine, a, KEY)
+    G1 = engine.program_group(a, KEY)
+    G2 = engine.group(handles)
+    for g, A in enumerate(handles):      # group() is bit-exact stacking
+        np.testing.assert_array_equal(np.asarray(G2.at_blocks[g]),
+                                      np.asarray(A.at_blocks))
+    np.testing.assert_allclose(np.asarray(G1.at_blocks),
+                               np.asarray(G2.at_blocks), atol=1e-5, rtol=0)
+    k = jax.random.fold_in(KEY, 3)
+    assert float(rel_l2(engine.group_mvm(G1, x, key=k),
+                        engine.group_mvm(G2, x, key=k))) <= 1e-5
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_group_solo_parity_local(stack, backend):
+    """Grouped member g == solo handle under fold_in(key, g), both
+    directions, reference and pallas backends (<= 1e-5; reference is
+    draw-identical)."""
+    a, x, y = stack
+    engine = AnalogEngine(make_cfg(), backend=backend)
+    G = engine.program_group(a, KEY)
+    handles = _solo_handles(engine, a, KEY)
+    k = jax.random.fold_in(KEY, 4)
+    Y = engine.group_mvm(G, x, key=k)
+    Z = engine.group_rmvm(G, y, key=k)
+    assert Y.shape == (SIZE, 100) and Z.shape == (SIZE, 90)
+    for g, A in enumerate(handles):
+        kg = jax.random.fold_in(k, g)
+        assert float(rel_l2(Y[g], engine.mvm(A, x, key=kg))) <= 1e-5
+        assert float(rel_l2(Z[g], engine.rmvm(A, y, key=kg))) <= 1e-5
+
+
+def test_group_solo_parity_streamed(stack):
+    """Grouped lax.switch producer execution == solo streamed handles."""
+    a, x, y = stack
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg, execution="streamed")
+    producers = [(lambda g: lambda i, j: _block(a[g], cfg, i, j))(g)
+                 for g in range(SIZE)]
+    G = engine.program_group(producers, KEY, shape=(100, 90))
+    assert G.da_blocks is None          # streamed groups re-derive da in-scan
+    k = jax.random.fold_in(KEY, 5)
+    Y = engine.group_mvm(G, x, key=k)
+    Z = engine.group_rmvm(G, y, key=k)
+    for g in range(SIZE):
+        A = engine.program(producers[g], jax.random.fold_in(KEY, g),
+                           shape=(100, 90))
+        kg = jax.random.fold_in(k, g)
+        assert float(rel_l2(Y[g], engine.mvm(A, x, key=kg))) <= 1e-5
+        assert float(rel_l2(Z[g], engine.rmvm(A, y, key=kg))) <= 1e-5
+
+
+def _block(a, cfg, i, j):
+    cm, cn = cfg.geom.capacity
+    return jax.lax.dynamic_slice(a, (i * cm, j * cn), (cm, cn))
+
+
+def _mesh_1x1():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_group_solo_bit_identical_distributed_1x1(stack):
+    """Within the distributed path, a 1x1-mesh grouped execute is
+    BIT-identical to the solo distributed execute per member."""
+    a, x, y = stack
+    engine = AnalogEngine(make_cfg(), execution="distributed",
+                          mesh=_mesh_1x1())
+    G = engine.program_group(a, KEY)
+    assert G.mesh_sharded
+    handles = _solo_handles(engine, a, KEY)
+    k = jax.random.fold_in(KEY, 6)
+    Y = engine.group_mvm(G, x, key=k)
+    Z = engine.group_rmvm(G, y, key=k)
+    for g, A in enumerate(handles):
+        kg = jax.random.fold_in(k, g)
+        np.testing.assert_array_equal(np.asarray(Y[g]),
+                                      np.asarray(engine.mvm(A, x, key=kg)))
+        np.testing.assert_array_equal(np.asarray(Z[g]),
+                                      np.asarray(engine.rmvm(A, y, key=kg)))
+
+
+def test_default_key_schedule_matches_solo_calls(stack):
+    """With NO explicit key, grouped call c draws exactly what each solo
+    handle's call c draws: member g's schedule is preserved inside the
+    group (call 0 uses member_keys, call c folds the group counter)."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    handles = _solo_handles(engine, a, KEY)
+    G = engine.group(handles)                # bit-exact stacked operands
+    for _ in range(2):                       # calls 0 and 1
+        Y = engine.group_mvm(G, x)
+        for g, A in enumerate(handles):
+            np.testing.assert_array_equal(np.asarray(Y[g]),
+                                          np.asarray(engine.mvm(A, x)))
+
+
+def test_moe_experts_pytree_equals_stacked_solo(stack):
+    """The MoE pattern: a pytree of expert kernels grouped into one image
+    equals the stacked outputs of per-expert solo handles."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    experts = {f"expert_{g}": a[g] for g in range(SIZE)}
+    G = engine.program_group(experts, KEY)
+    k = jax.random.fold_in(KEY, 7)
+    Y = engine.group_mvm(G, x, key=k)
+    solo = jnp.stack([
+        engine.mvm(A, x, key=jax.random.fold_in(k, g))
+        for g, A in enumerate(_solo_handles(engine, a, KEY))])
+    assert float(rel_l2(Y, solo)) <= 1e-5
+
+
+# ----------------------------------------------------------- batched inputs
+def test_group_input_shapes(stack):
+    """1-D broadcast, 2-D per-member, and 3-D batched inputs agree."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    G = engine.program_group(a, KEY)
+    k = jax.random.fold_in(KEY, 8)
+    y1 = engine.group_mvm(G, x, key=k)                       # (S, m)
+    xm = jnp.stack([x] * SIZE)                               # (S, n)
+    y2 = engine.group_mvm(G, xm, key=k)
+    xb = jnp.broadcast_to(x[None, :, None], (SIZE, 90, 2))   # (S, n, B)
+    y3 = engine.group_mvm(G, xb, key=k)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert y3.shape == (SIZE, 100, 2)
+    with pytest.raises(ValueError):
+        engine.group_mvm(G, jnp.zeros((SIZE + 1, 90)), key=k)
+    with pytest.raises(ValueError):
+        engine.group_mvm(G, jnp.zeros((77,)), key=k)
+
+
+# ------------------------------------------------------------ single dispatch
+def test_group_and_chain_single_dispatch(stack):
+    """The jitted grouped closures trace to exactly ONE top-level eqn --
+    the whole multi-image (or whole-model chained) execute is one launch."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    G = engine.program_group(a, KEY)
+    sq = jnp.einsum("gmn,gkn->gmk", a, a)        # (S, 100, 100) square
+    C = engine.program_group(sq, KEY)
+    k = jax.random.fold_in(KEY, 9)
+    for fn, vec in ((engine.group_mvm_fn(G), x),
+                    (engine.group_mvm_fn(G, transpose=True),
+                     jnp.zeros((100,))),
+                    (engine.chain_fn(C, activation="relu"),
+                     jnp.zeros((100,)))):
+        jaxpr = trace(jax.jit(fn), vec, k)
+        report = dispatch_count(jaxpr, max_top_level=1)
+        assert not report.violations, report.violations
+
+
+def test_chain_matches_solo_loop(stack):
+    """chain_mvm == the per-layer Python loop with the same activation and
+    per-member keys -- activation in, logits out, one dispatch."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    sq = jax.random.normal(KEY, (SIZE, 96, 96)) / 96
+    G = engine.program_group(sq, KEY)
+    k = jax.random.fold_in(KEY, 10)
+    h = jax.random.normal(jax.random.fold_in(KEY, 11), (96,))
+    y = engine.chain_mvm(G, h, key=k, activation="relu")
+    ref = h
+    for g, A in enumerate(_solo_handles(engine, sq, KEY)):
+        ref = jax.nn.relu(engine.mvm(A, ref, key=jax.random.fold_in(k, g)))
+    assert float(rel_l2(y, ref)) <= 1e-5
+    with pytest.raises(ValueError):              # non-square members
+        engine.chain_mvm(engine.program_group(a, KEY), x, key=k)
+    with pytest.raises(ValueError):              # unknown activation
+        engine.chain_mvm(G, h, key=k, activation="swoosh")
+
+
+# ------------------------------------------------------------------- aging
+def test_group_age_ledger_matches_solo(stack):
+    """Per-member AgeLedger: grouped aged execution applies each member's
+    own drift/fault transform and advances every member exactly as a solo
+    aged handle does."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    G = engine.group(_solo_handles(engine, a, KEY))   # bit-exact operands
+    attach_group_age(G)
+    G.ages = G.ages.advanced(50).elapsed(3600.0)
+    k = jax.random.fold_in(KEY, 12)
+    Y = engine.group_mvm(G, x, key=k)
+    assert float(G.ages.mvms[0, 0, 0]) == 51.0   # advanced inside execute
+    for g, A in enumerate(_solo_handles(engine, a, KEY)):
+        attach_age(A)
+        A.age = A.age.advanced(50).elapsed(3600.0)
+        y = engine.mvm(A, x, key=jax.random.fold_in(k, g))
+        np.testing.assert_array_equal(np.asarray(Y[g]), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(G.ages.mvms[g]),
+                                      np.asarray(A.age.mvms))
+
+
+# ---------------------------------------------------------- bounded caches
+def test_scan_cache_bounded(stack):
+    """Bucket churn can't grow the per-handle pipeline cache past
+    SCAN_CACHE_MAX: a long-lived server cycling decode/batch buckets holds
+    a fixed number of compiled pipelines."""
+    a, x, _ = stack
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg, execution="streamed")
+    A = engine.program(lambda i, j: _block(a[0], cfg, i, j), KEY,
+                       shape=(100, 90))
+    k = jax.random.fold_in(KEY, 13)
+    for batch in range(1, SCAN_CACHE_MAX + 5):
+        xb = jnp.broadcast_to(x[:, None], (90, batch))
+        engine.mvm(A, xb, key=k)
+    assert isinstance(A._scan_exec, _BoundedCache)
+    assert len(A._scan_exec) <= SCAN_CACHE_MAX
+    A.release()
+    assert A._scan_exec is None
+
+
+def test_group_scan_cache_bounded(stack):
+    a, x, _ = stack
+    cfg = make_cfg()
+    engine = AnalogEngine(cfg, execution="streamed")
+    producers = [(lambda g: lambda i, j: _block(a[g], cfg, i, j))(g)
+                 for g in range(SIZE)]
+    G = engine.program_group(producers, KEY, shape=(100, 90))
+    k = jax.random.fold_in(KEY, 14)
+    for batch in range(1, SCAN_CACHE_MAX + 5):
+        xb = jnp.broadcast_to(x[None, :, None], (SIZE, 90, batch))
+        engine.group_mvm(G, xb, key=k)
+    assert len(G._scan_exec) <= SCAN_CACHE_MAX
+    G.release()
+    assert G._scan_exec is None
+
+
+def test_server_decode_cache_bounded():
+    """Server._decode is the same bounded LRU: cycling more decode buckets
+    than SCAN_CACHE_MAX never holds more compiled pipelines than the cap
+    (buckets are built lazily here -- nothing compiles until called)."""
+    from repro.train.serve import Server
+    srv = Server.__new__(Server)                 # cache behavior only
+    srv._decode = _BoundedCache()
+    for n in range(2, SCAN_CACHE_MAX + 6):
+        srv._decode.put(n, object())
+    assert len(srv._decode) <= SCAN_CACHE_MAX
+    assert srv._decode.get(SCAN_CACHE_MAX + 5) is not None
+    assert srv._decode.get(2) is None            # evicted
+
+
+# -------------------------------------------------------------- validation
+def test_group_validation(stack):
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    other = AnalogEngine(make_cfg(k_iters=3))
+    G = engine.program_group(a, KEY)
+    with pytest.raises(ValueError):              # mixed member shapes
+        engine.program_group([a[0], a[1][:64]], KEY)
+    with pytest.raises(ValueError):              # arrays mixed with producers
+        engine.program_group([a[0], lambda i, j: a[1]], KEY)
+    with pytest.raises(ValueError):              # group() needs handles
+        engine.group([])
+    with pytest.raises((TypeError, ValueError)):   # solo API on a group
+        engine.mvm(G, x)
+    with pytest.raises((TypeError, ValueError)):   # cross-engine execution
+        other.group_mvm(G, x, key=KEY)
+    with pytest.raises(ValueError):              # local engine, producers
+        engine.program_group([lambda i, j: a[0]] * 2, KEY, shape=(100, 90))
+    with pytest.raises(ValueError):              # default key inside jit
+        jax.jit(lambda v: engine.group_mvm(G, v))(x)
+
+
+def test_group_stats_and_member_views(stack):
+    """Write stats total the per-member cost; member(g) is a usable view;
+    input stats scale with the group size."""
+    a, x, _ = stack
+    engine = AnalogEngine(make_cfg())
+    G = engine.program_group(a, KEY)
+    A = engine.program(a[0], KEY)
+    assert G.write_stats.energy_j == pytest.approx(
+        SIZE * A.write_stats.energy_j, rel=1e-6)
+    member = G.member(1)
+    assert member.shape == (100, 90)
+    np.testing.assert_array_equal(np.asarray(member.at_blocks),
+                                  np.asarray(G.at_blocks[1]))
+    gs = G.input_write_stats(batch=4)
+    ss = engine.input_write_stats(A, batch=4)
+    assert gs.energy_j == pytest.approx(SIZE * ss.energy_j, rel=1e-6)
+    assert (G @ x).shape == (SIZE, 100)
+
+
+# -------------------------------------------------- grouped model programming
+def test_program_rram_grouped_parity_and_plan():
+    """Grouped program_rram == the ungrouped walk (w_tilde to float32
+    rounding, dw within its bf16 quantization floor) and the dispatch plan
+    collapses to distinct kernel shapes."""
+    from repro.configs.base import RRAMBackendConfig
+    from repro.models.rram import program_rram, programming_dispatch_plan
+    cfg = RRAMBackendConfig(enabled=True)
+    params = {
+        "blk0": {"attn": {"w": jax.random.normal(KEY, (64, 48)) / 8},
+                 "mlp": {"w": jax.random.normal(
+                     jax.random.fold_in(KEY, 1), (48, 64)) / 8}},
+        "blk1": {"attn": {"w": jax.random.normal(
+                     jax.random.fold_in(KEY, 2), (64, 48)) / 8},
+                 "scan": {"w": jax.random.normal(
+                     jax.random.fold_in(KEY, 3), (2, 32, 32)) / 8}},
+    }
+    plan = programming_dispatch_plan(params)
+    assert plan == {"kernels": 4, "groups": 3}   # (64,48) x2 collapse
+    grouped, gs = program_rram(params, cfg, KEY, group=True)
+    solo, ss = program_rram(params, cfg, KEY, group=False)
+    flat_g, _ = jax.tree_util.tree_flatten_with_path(grouped)
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(solo)
+    for (path, lg), (_, ls) in zip(flat_g, flat_s):
+        name = jax.tree_util.keystr(path)
+        tol = 1e-4 if "dw" in name else 1e-5     # dw stored in bf16
+        np.testing.assert_allclose(
+            np.asarray(jnp.asarray(lg, jnp.float32)),
+            np.asarray(jnp.asarray(ls, jnp.float32)),
+            atol=tol, rtol=0, err_msg=name)
+    assert gs.energy_j == pytest.approx(ss.energy_j, rel=1e-6)

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Perf-regression gate: fresh benchmark rows vs the checked-in baselines.
+
+Re-runs a benchmark module in its quick/smoke mode and compares every row
+that also exists in the checked-in ``BENCH_<name>.json`` (matched by row
+``name``) on two axes:
+
+  * **dispatch counts** -- every ``dispatch*``-keyed field must match the
+    baseline EXACTLY.  Dispatch structure is topology-independent: a PR
+    that silently re-introduces per-layer or per-block launches fails here
+    even on a machine whose wall-clock numbers are incomparable.
+  * **``us_per_call``** -- fresh timing must stay within ``--tolerance``
+    (default 3x) of the baseline, but ONLY when :func:`run_metadata`
+    fingerprints match (backend, device count, XLA flags).  On a different
+    topology the timing check is skipped with a notice instead of producing
+    a false verdict -- the guard the BENCH metadata stamp exists for.
+
+Rows present only in the fresh run (or only in the full-sweep baseline --
+smoke sweeps a subset) are ignored: the gate compares trajectories, it does
+not require identical sweeps.
+
+Usage:
+
+    PYTHONPATH=src python tools/check_perf.py                   # all gated
+    PYTHONPATH=src python tools/check_perf.py --bench model_dispatch
+    PYTHONPATH=src python tools/check_perf.py --tolerance 5.0
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+#: benchmarks gated here: checked-in baseline -> module with a run(quick=)
+#: entry point whose quick rows share names with the full-sweep baseline.
+GATED = {
+    "model_dispatch": "benchmarks.model_dispatch",
+    "streamed_scaling": "benchmarks.streamed_scaling",
+}
+
+
+def _baseline(name: str) -> dict:
+    path = ROOT / f"BENCH_{name}.json"
+    with open(path) as f:
+        return json.load(f)
+
+
+def _dispatch_keys(row: dict):
+    return sorted(k for k in row if "dispatch" in k)
+
+
+def check_bench(name: str, module: str, tolerance: float) -> list:
+    """Returns a list of violation strings for one gated benchmark."""
+    from benchmarks.common import run_metadata
+
+    base = _baseline(name)
+    fresh_rows = importlib.import_module(module).run(quick=True)
+    base_rows = {r["name"]: r for r in base["rows"]}
+    meta_now, meta_base = run_metadata(), base["metadata"]
+    same_topology = meta_now == meta_base
+
+    violations = []
+    compared = 0
+    for row in fresh_rows:
+        ref = base_rows.get(row["name"])
+        if ref is None:
+            continue
+        compared += 1
+        for k in _dispatch_keys(ref):
+            if row.get(k) != ref[k]:
+                violations.append(
+                    f"{name}/{row['name']}: {k} = {row.get(k)} "
+                    f"(baseline {ref[k]}) -- dispatch structure changed")
+        if same_topology and ref.get("us_per_call") and row.get("us_per_call"):
+            ratio = row["us_per_call"] / ref["us_per_call"]
+            if ratio > tolerance:
+                violations.append(
+                    f"{name}/{row['name']}: us_per_call {row['us_per_call']} "
+                    f"is {ratio:.1f}x baseline {ref['us_per_call']} "
+                    f"(> tolerance {tolerance}x)")
+    if not compared:
+        violations.append(
+            f"{name}: no fresh row matches the baseline -- sweep renamed?")
+    if not same_topology:
+        print(f"[perf] {name}: topology differs from baseline "
+              f"({meta_now} vs {meta_base}); timing check skipped, "
+              f"dispatch counts still gated")
+    print(f"[perf] {name}: {compared} rows compared, "
+          f"{len(violations)} violation(s)")
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default=None,
+                    help="gate only this benchmark (default: all gated)")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="max fresh/baseline us_per_call ratio (same "
+                         "topology only)")
+    args = ap.parse_args()
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    names = [args.bench] if args.bench else sorted(GATED)
+    violations = []
+    for name in names:
+        if name not in GATED:
+            print(f"[perf] unknown benchmark {name!r}; gated: "
+                  f"{sorted(GATED)}")
+            return 2
+        violations += check_bench(name, GATED[name], args.tolerance)
+    for v in violations:
+        print(f"[perf] FAIL {v}")
+    if violations:
+        return 1
+    print("perf OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
