@@ -1,0 +1,174 @@
+"""LSQR/LSMR least-squares convergence: device x EC x algorithm sweep.
+
+The rectangular-workload companion to ``pdhg_convergence``: overdetermined
+``min ||A x - b||`` problems with an inconsistent RHS (nonzero optimal
+residual) solved by :func:`repro.solvers.lsqr` and
+:func:`repro.solvers.lsmr` against one programmed image -- every
+Golub-Kahan bidiagonalization step is one corrected forward MVM plus one
+corrected TRANSPOSED MVM (``rmatvec``), both billed to the ledger.
+Reported per row:
+
+  * ``iters``      -- bidiagonalization iterations to the residual tol;
+  * ``normal_res`` -- ||A^T (A x - b)|| / (||A|| ||A x - b||), the
+                      least-squares optimality certificate (digital recompute);
+  * ``x_gap``      -- rel_l2(x, x_direct) against the dense
+                      ``jnp.linalg.lstsq`` solution, the acceptance metric
+                      (<= the gate for the precision device with EC);
+  * ``E_write_J`` / ``E_iters_J`` -- one-time write vs per-iteration energy
+                      (forward + transposed input writes).
+
+Results land in ``BENCH_lstsq_convergence.json`` (full runs refresh the
+checked-in baseline at the repo root; smoke/quick runs write to the temp
+dir), with the initialized device count + ``XLA_FLAGS`` recorded in the
+metadata block.
+
+    PYTHONPATH=src python -m benchmarks.lstsq_convergence            # quick
+    PYTHONPATH=src python -m benchmarks.lstsq_convergence --smoke    # CI
+    PYTHONPATH=src python -m benchmarks.lstsq_convergence --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro import solvers
+from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
+from repro.engine import AnalogEngine
+
+from .common import run_metadata
+
+OUT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_lstsq_convergence.json")
+
+# (m, n, cell, tol, maxiter)
+CASE_SMOKE = (96, 64, 32, 1e-4, 60)
+CASE_QUICK = (192, 128, 64, 5e-5, 150)
+CASE_FULL = (512, 256, 64, 2e-5, 400)
+
+DEVICES_QUICK = ["epiram", "taox-hfox"]
+DEVICES_FULL = ["epiram", "ag-si", "alox-hfo2", "taox-hfox"]
+
+ALGOS = {"lsqr": solvers.lsqr, "lsmr": solvers.lsmr}
+
+
+def _normal_residual(a, x, b) -> float:
+    """||A^T r|| / (||A||_F ||r||): the LS optimality certificate."""
+    r = a @ x - b
+    denom = float(jnp.linalg.norm(a)) * float(jnp.linalg.norm(r)) + 1e-30
+    return float(jnp.linalg.norm(a.T @ r)) / denom
+
+
+def _row(name: str, res, a, b, x_direct) -> Dict:
+    led = res.ledger
+    return {
+        "name": name,
+        "iters": res.iterations,
+        "converged": bool(res.converged),
+        "residual": res.final_residual,
+        "normal_res": _normal_residual(a, res.x, b),
+        "x_gap": float(rel_l2(res.x, x_direct)),
+        "mvms": led.mvms,
+        "mvms_t": led.mvms_t,
+        "E_write_J": led.write_energy_j,
+        "E_iters_J": led.iteration_energy_j,
+    }
+
+
+def _solve_case(algo: str, device: str, ec: bool, a, b, x_direct,
+                tol, maxiter, cell) -> Dict:
+    geom = MCAGeometry(tile_rows=1, tile_cols=1,
+                       cell_rows=cell, cell_cols=cell)
+    cfg = CrossbarConfig(device=get_device(device), geom=geom, k_iters=5,
+                         ec=ec)
+    engine = AnalogEngine(cfg)
+    key = jax.random.PRNGKey(3)
+    A = engine.program(a, key)
+    res = ALGOS[algo](A, b, tol=tol, maxiter=maxiter, key=key)
+    return _row(f"{algo}/{device}/{'ec' if ec else 'raw'}", res, a, b,
+                x_direct)
+
+
+def run(quick: bool = True, smoke: bool = False) -> List[Dict]:
+    m, n, cell, tol, maxiter = CASE_SMOKE if smoke else \
+        (CASE_QUICK if quick else CASE_FULL)
+    devices = DEVICES_QUICK if (quick or smoke) else DEVICES_FULL
+    key = jax.random.PRNGKey(17)
+    ka, kx, kr = jax.random.split(key, 3)
+    # Well-conditioned overdetermined system with an INCONSISTENT RHS:
+    # b = A x* + noise, so the optimal residual is nonzero and the normal
+    # equations (not ||r|| = 0) certify optimality.
+    a = jax.random.normal(ka, (m, n), jnp.float32) / jnp.sqrt(jnp.float32(m))
+    x_star = jax.random.normal(kx, (n,), jnp.float32)
+    b = a @ x_star + 0.1 * jax.random.normal(kr, (m,), jnp.float32)
+    x_direct = jnp.linalg.lstsq(a, b)[0]
+
+    rows = []
+    for algo in ALGOS:
+        digital = ALGOS[algo](a, b, tol=tol, maxiter=maxiter)
+        drow = _row(f"{algo}/digital/m{m}n{n}", digital, a, b, x_direct)
+        drow["E_write_J"] = 0.0
+        drow["E_iters_J"] = 0.0
+        rows.append(drow)
+    for device in devices:
+        for algo in ALGOS:
+            rows.append(_solve_case(algo, device, True, a, b, x_direct,
+                                    tol, maxiter, cell))
+    # EC off on the precision device: shows what tier-1+2 correction buys
+    rows.append(_solve_case("lsqr", devices[0], False, a, b, x_direct,
+                            tol, maxiter, cell))
+    _write_json(rows, quick or smoke, "smoke" if smoke else
+                ("quick" if quick else "full"))
+    return rows
+
+
+def _out_path(quick: bool) -> str:
+    if quick:
+        return os.path.join(tempfile.gettempdir(),
+                            "BENCH_lstsq_convergence.smoke.json")
+    return OUT_JSON
+
+
+def _write_json(rows: List[Dict], quick: bool, mode: str) -> str:
+    payload = {
+        "bench": "lstsq_convergence",
+        "mode": mode,
+        "metadata": run_metadata(),
+        "rows": rows,
+    }
+    out = _out_path(quick)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny system / loose tol (CI fast job); writes to "
+                         "the temp dir")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale system + all four devices; refreshes "
+                         "the checked-in JSON")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(f"{r['name']}: {r['iters']} iters, residual "
+              f"{r['residual']:.1e}, normal_res {r['normal_res']:.1e}, "
+              f"x_gap {r['x_gap']:.1e}, E_iters {r['E_iters_J']:.2e} J")
+    print(f"wrote {_out_path(not args.full)}")
+    # CI contract: the precision device with EC recovers the dense
+    # ``jnp.linalg.lstsq`` solution.  Analog read noise perturbs the
+    # bidiagonalization, so the gate sits an order above the solve tol.
+    ec_row = next(r for r in rows if r["name"].startswith("lsqr/epiram/ec"))
+    assert ec_row["x_gap"] <= 5e-3, ec_row
+
+
+if __name__ == "__main__":
+    main()

@@ -23,14 +23,16 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (lm_step, model_dispatch, pdhg_convergence, reliability,
-                   serving, solver_convergence, streamed_scaling,
-                   strong_scaling, table1_ec, weak_scaling, writeverify_sweep)
+    from . import (lm_step, lstsq_convergence, model_dispatch,
+                   pdhg_convergence, reliability, serving, solver_convergence,
+                   streamed_scaling, strong_scaling, table1_ec, weak_scaling,
+                   writeverify_sweep)
     modules = [
         ("table1_ec", table1_ec),
         ("writeverify_sweep", writeverify_sweep),
         ("solver_convergence", solver_convergence),
         ("pdhg_convergence", pdhg_convergence),
+        ("lstsq_convergence", lstsq_convergence),
         ("weak_scaling", weak_scaling),
         ("strong_scaling", strong_scaling),
         ("streamed_scaling", streamed_scaling),

@@ -266,6 +266,80 @@ def _build_pdhg(mesh_shape: Tuple[int, int]) -> BuiltPipeline:
         producer=producer, allowed_axes=engine.collective_axes)
 
 
+def _build_lsqr() -> BuiltPipeline:
+    """End-to-end LSQR least-squares core over a streamed producer: the
+    whole Golub-Kahan bidiagonalization solve is ONE traced program."""
+    from repro.engine import AnalogEngine
+    from repro.solvers import as_operator, lsqr_pipeline
+    cfg = _small_cfg()
+    cap = cfg.geom.capacity[0]
+    n = 4 * cap
+    engine = AnalogEngine(cfg, execution="streamed")
+    producer = V.CallCounter(_banded(n, cap).block)
+    A = engine.program(producer, _key(), shape=(n, n))
+    core = lsqr_pipeline(as_operator(A), tol=1e-5, maxiter=50)
+    return BuiltPipeline(fn=core,
+                        args=(_vec(n, 1), _vec(n, 1), _key_spec()),
+                        producer=producer)
+
+
+def _build_lanczos() -> BuiltPipeline:
+    """Lanczos extremal-eigenpair sweep (power-iteration seed included)
+    over a streamed producer, one traced program, ``(key)`` in."""
+    from repro.engine import AnalogEngine
+    from repro.solvers import as_operator, lanczos_pipeline
+    cfg = _small_cfg()
+    cap = cfg.geom.capacity[0]
+    n = 4 * cap
+    engine = AnalogEngine(cfg, execution="streamed")
+    producer = V.CallCounter(_banded(n, cap).block)
+    A = engine.program(producer, _key(), shape=(n, n))
+    core = lanczos_pipeline(as_operator(A), tol=1e-4, maxiter=24)
+    return BuiltPipeline(fn=core, args=(_key_spec(),), producer=producer)
+
+
+def _build_admm() -> BuiltPipeline:
+    """Linearized-ADMM box-QP core (one matvec + one rmatvec per
+    iteration, power-iteration step-size estimate traced in) over a
+    streamed producer."""
+    from repro.engine import AnalogEngine
+    from repro.solvers import admm_pipeline, as_operator
+    cfg = _small_cfg()
+    cap = cfg.geom.capacity[0]
+    n = 4 * cap
+    engine = AnalogEngine(cfg, execution="streamed")
+    producer = V.CallCounter(_banded(n, cap).block)
+    A = engine.program(producer, _key(), shape=(n, n))
+    core = admm_pipeline(as_operator(A), lo=-jnp.ones((n,), jnp.float32),
+                         hi=jnp.ones((n,), jnp.float32), tol=1e-4,
+                         maxiter=100)
+    return BuiltPipeline(
+        fn=core,
+        args=(_vec(n, 1), _vec(n, 1), _vec(n, 1), _key_spec()),
+        producer=producer)
+
+
+def _build_lstsq_virtual(mesh_shape: Tuple[int, int]) -> BuiltPipeline:
+    """The paper-scale least-squares acceptance pattern: LSQR over the
+    virtual 65,536^2 resident=False operator -- the static proof that a
+    whole multi-RHS least-squares solve never materializes an A-sized
+    aval on any device of the mesh."""
+    from repro.engine import AnalogEngine
+    from repro.solvers import as_operator, lsqr_pipeline
+    cfg = _virtual_cfg()
+    engine = AnalogEngine(cfg, execution="distributed",
+                          mesh=_mesh(mesh_shape))
+    producer = V.CallCounter(_banded(VIRTUAL_N, VIRTUAL_CAP).block)
+    A = engine.program(producer, _key(), shape=(VIRTUAL_N, VIRTUAL_N),
+                       resident=False)
+    core = lsqr_pipeline(as_operator(A), tol=1e-4, maxiter=50)
+    n = VIRTUAL_N
+    return BuiltPipeline(fn=core,
+                        args=(_vec(n, 1), _vec(n, 1), _key_spec()),
+                        producer=producer,
+                        allowed_axes=engine.collective_axes)
+
+
 def _build_serving_decode() -> BuiltPipeline:
     """The serving decode hot path: an analog LM Server's ENTIRE n-token
     greedy decode as one ``lax.scan`` -- the fused pipeline every
@@ -377,6 +451,28 @@ def registered_pipelines() -> List[PipelineSpec]:
         placement="distributed", direction="solve", backend="reference",
         build=(lambda: _build_pdhg((1, 1))),
         aval_budget=16 * virt, max_producer_calls=8, max_top_level=64,
+        per_device_budget=16 * virt, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="solve-lsqr-streamed-reference",
+        placement="streamed", direction="solve", backend="reference",
+        build=_build_lsqr, aval_budget=64 * small, max_producer_calls=6,
+        max_top_level=48, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="solve-lanczos-streamed-reference",
+        placement="streamed", direction="solve", backend="reference",
+        build=_build_lanczos, aval_budget=64 * small, max_producer_calls=6,
+        max_top_level=48, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="solve-admm-streamed-reference",
+        placement="streamed", direction="solve", backend="reference",
+        build=_build_admm, aval_budget=64 * small, max_producer_calls=8,
+        max_top_level=64, allow_baked=True))
+    specs.append(PipelineSpec(
+        name="solve-lstsq-distributed-virtual65536-2x4",
+        placement="distributed", direction="solve", backend="reference",
+        build=(lambda: _build_lstsq_virtual((2, 4))),
+        min_devices=8,
+        aval_budget=16 * virt, max_producer_calls=8, max_top_level=48,
         per_device_budget=16 * virt, allow_baked=True))
     return specs
 

@@ -14,6 +14,18 @@ or bare matvec) into ``A x = b`` solutions:
     PROGRAMS (``min c'x  s.t.  A x = b, x >= 0``): each iteration is one
     corrected ``A @ x`` plus one corrected transposed ``A.T @ y`` against the
     same programmed image -- the workload of the companion RRAM-PDHG paper;
+  * :mod:`~repro.solvers.lstsq` -- LSQR and LSMR least-squares for
+    RECTANGULAR operators (``min ||A x - b||`` on non-square crossbars),
+    one matvec + one rmatvec per Golub-Kahan step;
+  * :mod:`~repro.solvers.eigen` -- extremal eigenpairs (Lanczos seeded from
+    the power-iteration estimator; block LOBPCG) and the Lanczos
+    ``operator_norm`` that feeds PDHG/Richardson step sizing;
+  * :mod:`~repro.solvers.admm` -- linearized ADMM for BOX-CONSTRAINED
+    QUADRATIC PROGRAMS (``min (1/2)||Ax-b||^2 + q'x  s.t. lo <= x <= hi``),
+    also one matvec + one rmatvec per iteration;
+  * :mod:`~repro.solvers.registry` -- one metadata record per solver (oracle
+    family, residual recompute, problem generator) driving the
+    property-based contract suite;
   * :mod:`~repro.solvers.base` -- :class:`SolveResult` with per-iteration
     residual history and a :class:`SolveLedger` splitting energy/latency into
     the one-time programming cost and the per-iteration input-write cost
@@ -37,15 +49,25 @@ Quickstart::
     res.ledger.write_energy_j               # paid once
     res.ledger.iteration_energy_j           # mvms x input-write cost
 """
+from .admm import admm, admm_pipeline, random_box_qp
 from .base import LinearOperator, SolveLedger, SolveResult, as_operator
+from .eigen import (lanczos, lanczos_pipeline, lobpcg, lobpcg_pipeline,
+                    operator_norm)
 from .krylov import bicgstab, cg, cg_pipeline, gmres
+from .lstsq import lsmr, lsmr_pipeline, lsqr, lsqr_pipeline
 from .pdhg import pdhg, pdhg_pipeline, random_feasible_lp
 from .refinement import refine
+from .registry import SolverSpec, registry
 from .stationary import estimate_omega, jacobi, richardson, spectral_bounds
 
 __all__ = [
     "LinearOperator", "SolveLedger", "SolveResult", "as_operator",
+    "admm", "admm_pipeline", "random_box_qp",
     "bicgstab", "cg", "cg_pipeline", "gmres", "pdhg", "pdhg_pipeline",
     "random_feasible_lp", "refine",
+    "lanczos", "lanczos_pipeline", "lobpcg", "lobpcg_pipeline",
+    "operator_norm",
+    "lsmr", "lsmr_pipeline", "lsqr", "lsqr_pipeline",
+    "SolverSpec", "registry",
     "estimate_omega", "jacobi", "richardson", "spectral_bounds",
 ]

@@ -262,6 +262,9 @@ class SolveResult:
     # Checkpoint restores a fault-tolerant wrapper performed to finish this
     # solve (repro.reliability.ft_solve); 0 for a clean run.
     restores: int = 0
+    # Eigen-solves (lanczos / lobpcg) return their eigenvalue estimates here
+    # (ascending, matching the columns of x); None for linear solves.
+    eigenvalues: Optional[jnp.ndarray] = None
 
     @property
     def final_residual(self) -> float:

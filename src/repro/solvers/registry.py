@@ -1,0 +1,332 @@
+"""The solver registry: one metadata record per solver family member.
+
+Chowdhury et al.'s VMM-benchmarking argument (PAPERS.md) is that analog
+solvers diverge from their digital oracles in family-specific ways, so the
+test surface has to be SYSTEMATIC: every solver declares, in one place, how
+to build a random problem it should solve, how to run it, and how to
+digitally recompute the residual it reports.  The property-based contract
+suite (``tests/test_solver_contracts.py``) then asserts the same four
+invariants for every entry -- residual honesty (the recorded
+``final_residual`` matches the digital recompute), ``converged <=>
+final_residual <= tol``, iteration-0 honesty on trivial problems, and
+:class:`~repro.solvers.base.SolveLedger` additivity -- instead of each
+solver hand-rolling its own copies.
+
+Each :class:`SolverSpec` works on PROBLEM dicts:
+
+  ``{"a": dense matrix, "b": rhs, ...family extras...}``
+
+built by ``spec.make_problem(key, n, batch)`` (SPD for the linear/eigen
+families, rectangular for least-squares, LP/QP tuples with KNOWN optima for
+the primal-dual families) and ``spec.make_trivial(n, batch)`` (the
+zero-RHS / exact-``x0`` instance for entry honesty, ``None`` when the
+family has no such instance).  ``spec.solve(problem_or_A, problem, ...)``
+takes the operator separately from the problem so the contract and parity
+suites can substitute an :class:`~repro.engine.AnalogMatrix` (or any
+placement x backend combination) for the dense ``a`` without touching the
+rest of the problem data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .admm import admm, random_box_qp
+from .eigen import lanczos, lobpcg
+from .krylov import bicgstab, cg, gmres
+from .lstsq import lsmr, lsqr
+from .pdhg import pdhg, random_feasible_lp
+from .refinement import refine
+from .stationary import jacobi, richardson
+
+__all__ = ["SolverSpec", "registry"]
+
+_TINY = 1e-30
+
+
+def _norms(v):
+    v = v if v.ndim == 2 else v[:, None]
+    return jnp.sqrt(jnp.sum(jnp.square(v), axis=0))
+
+
+# --------------------------------------------------------------------------- #
+# Problem generators
+# --------------------------------------------------------------------------- #
+
+def _spd(key, n: int, cond: float = 50.0) -> jnp.ndarray:
+    """Random SPD with eigenvalues log-spaced over ``cond`` (a rotated
+    diagonal, so the conditioning is exact, not a sample statistic)."""
+    kq, = jax.random.split(key, 1)
+    q, _ = jnp.linalg.qr(jax.random.normal(kq, (n, n), jnp.float32))
+    lam = jnp.logspace(0.0, jnp.log10(cond), n, dtype=jnp.float32)
+    return (q * lam[None, :]) @ q.T
+
+
+def _linear_problem(key, n: int, batch: int, cond: float = 50.0):
+    ka, kb = jax.random.split(key)
+    return {"a": _spd(ka, n, cond),
+            "b": jax.random.normal(kb, (n, batch), jnp.float32)}
+
+
+def _linear_trivial(n: int, batch: int):
+    return {"a": jnp.eye(n, dtype=jnp.float32) * 2.0,
+            "b": jnp.zeros((n, batch), jnp.float32)}
+
+
+def _diag_dominant_problem(key, n: int, batch: int, cond: float = 50.0):
+    """Jacobi needs strict diagonal dominance, not just SPD."""
+    ka, kb = jax.random.split(key)
+    off = jax.random.normal(ka, (n, n), jnp.float32) / float(n)
+    a = 0.5 * (off + off.T) + jnp.eye(n, dtype=jnp.float32) * 2.0
+    return {"a": a, "b": jax.random.normal(kb, (n, batch), jnp.float32)}
+
+
+def _lstsq_problem(key, n: int, batch: int, cond: float = 50.0):
+    """Rectangular m > n with singular values log-spaced over sqrt(cond)
+    (the normal equations then see ``cond``), plus an inconsistent RHS."""
+    ka, kb, kq = jax.random.split(key, 3)
+    m = n + max(n // 2, 4)
+    u, _ = jnp.linalg.qr(jax.random.normal(ka, (m, n), jnp.float32))
+    v, _ = jnp.linalg.qr(jax.random.normal(kq, (n, n), jnp.float32))
+    sig = jnp.logspace(0.0, 0.5 * jnp.log10(cond), n, dtype=jnp.float32)
+    a = (u * sig[None, :]) @ v.T
+    return {"a": a, "b": jax.random.normal(kb, (m, batch), jnp.float32)}
+
+
+def _lstsq_trivial(n: int, batch: int):
+    m = n + max(n // 2, 4)
+    a = jnp.concatenate(
+        [jnp.eye(n, dtype=jnp.float32), jnp.ones((m - n, n), jnp.float32)],
+        axis=0)
+    return {"a": a, "b": jnp.zeros((m, batch), jnp.float32)}
+
+
+def _lp_problem(key, n: int, batch: int, cond: float = 50.0):
+    m = max(n // 2, 2)
+    a, b, c, x_star, y_star = random_feasible_lp(key, m, n, batch)
+    return {"a": a, "b": b, "c": c, "x_star": x_star, "y_star": y_star}
+
+
+def _lp_trivial(n: int, batch: int):
+    m = max(n // 2, 2)
+    return {"a": jnp.eye(m, n, dtype=jnp.float32),
+            "b": jnp.zeros((m, batch), jnp.float32),
+            "c": jnp.zeros((n, batch), jnp.float32)}
+
+
+def _qp_problem(key, n: int, batch: int, cond: float = 50.0):
+    m = n + max(n // 2, 4)
+    a, b, q, lo, hi, x_star = random_box_qp(key, m, n, batch)
+    return {"a": a, "b": b, "q": q, "lo": lo, "hi": hi, "x_star": x_star}
+
+
+def _qp_trivial(n: int, batch: int):
+    m = n + max(n // 2, 4)
+    a = jnp.concatenate(
+        [jnp.eye(n, dtype=jnp.float32), jnp.ones((m - n, n), jnp.float32)],
+        axis=0)
+    return {"a": a, "b": jnp.zeros((m, batch), jnp.float32),
+            "q": jnp.zeros((n, batch), jnp.float32),
+            "lo": -jnp.ones((n,), jnp.float32),
+            "hi": jnp.ones((n,), jnp.float32)}
+
+
+def _eigen_problem(key, n: int, batch: int, cond: float = 50.0):
+    return {"a": _spd(key, n, cond)}
+
+
+def _eigen_trivial(n: int, batch: int):
+    # Every vector of the identity is an eigenvector: any starting block is
+    # exact, so a block method must report entry convergence.
+    return {"a": jnp.eye(n, dtype=jnp.float32)}
+
+
+# --------------------------------------------------------------------------- #
+# Digital residual recomputation (the contract's ground truth)
+# --------------------------------------------------------------------------- #
+
+def _recompute_linear(problem, result) -> float:
+    a, b = problem["a"], problem["b"]
+    x = result.x if result.x.ndim == 2 else result.x[:, None]
+    bb = b if b.ndim == 2 else b[:, None]
+    rel = _norms(bb - a @ x) / jnp.maximum(_norms(bb), _TINY)
+    return float(jnp.max(rel))
+
+
+def _recompute_lstsq(problem, result) -> float:
+    a, b = problem["a"], problem["b"]
+    x = result.x if result.x.ndim == 2 else result.x[:, None]
+    bb = b if b.ndim == 2 else b[:, None]
+    num = _norms(a.T @ (bb - a @ x))
+    den = jnp.maximum(_norms(a.T @ bb), _TINY)
+    return float(jnp.max(num / den))
+
+
+def _recompute_lp(problem, result) -> float:
+    """PDHG's KKT residual, digitally: max of primal/dual infeasibility and
+    the relative duality gap at (result.x, result.dual)."""
+    a = problem["a"]
+    b = problem["b"] if problem["b"].ndim == 2 else problem["b"][:, None]
+    c = problem["c"] if problem["c"].ndim == 2 else problem["c"][:, None]
+    x = result.x if result.x.ndim == 2 else result.x[:, None]
+    y = result.dual if result.dual.ndim == 2 else result.dual[:, None]
+    primal = _norms(a @ x - b) / (1.0 + _norms(b))
+    dual = _norms(jnp.maximum(-(c + a.T @ y), 0.0)) / (1.0 + _norms(c))
+    pobj = jnp.sum(c * x, axis=0)
+    dobj = -jnp.sum(b * y, axis=0)
+    gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+    return float(jnp.max(jnp.maximum(jnp.maximum(primal, dual), gap)))
+
+
+def _recompute_qp(problem, result) -> float:
+    """ADMM's KKT measure, digitally: projected-gradient stationarity plus
+    the consensus gap to the feasible split copy in ``result.dual``."""
+    a = problem["a"]
+    b = problem["b"] if problem["b"].ndim == 2 else problem["b"][:, None]
+    q = problem["q"] if problem["q"].ndim == 2 else problem["q"][:, None]
+    lo, hi = problem["lo"][:, None], problem["hi"][:, None]
+    x = result.x if result.x.ndim == 2 else result.x[:, None]
+    z = result.dual if result.dual.ndim == 2 else result.dual[:, None]
+    grad = a.T @ (a @ x - b) + q
+    stat = _norms(x - jnp.clip(x - grad, lo, hi))
+    feas = _norms(x - z)
+    return float(jnp.max((stat + feas) / (1.0 + _norms(x))))
+
+
+def _recompute_eigen(problem, result) -> float:
+    """Relative Ritz residual of every returned (eigenvalue, column) pair."""
+    a = problem["a"]
+    x = result.x if result.x.ndim == 2 else result.x[:, None]
+    theta = result.eigenvalues
+    resid = _norms(a @ x - x * theta[None, :])
+    return float(jnp.max(resid / jnp.maximum(jnp.abs(theta), _TINY)))
+
+
+# --------------------------------------------------------------------------- #
+# Spec + registry
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Everything the contract/parity suites need to exercise one solver.
+
+    ``solve(A, problem, *, tol, maxiter, key)`` runs the solver with ``A``
+    standing in for ``problem["a"]`` (a dense array in the digital contract
+    tests, an :class:`~repro.engine.AnalogMatrix` in the parity matrix).
+    ``recompute(problem, result)`` returns the family's residual evaluated
+    digitally at the returned iterates -- the quantity the recorded
+    ``final_residual`` must honestly track.  ``slack``/``floor`` bound the
+    allowed recurrence drift: ``recompute <= max(slack * recorded, floor)``
+    (``floor`` absorbs the float32 noise floor once a recurrence has
+    converged below what a digital recompute can resolve).
+    """
+
+    name: str
+    family: str                 # linear | lstsq | lp | qp | eigen
+    solve: Callable
+    make_problem: Callable
+    recompute: Callable
+    make_trivial: Optional[Callable] = None
+    needs_rmatvec: bool = False
+    multi_rhs: bool = True
+    slack: float = 3.0
+    floor: float = 5e-4
+    # Residuals recorded one step behind the returned iterate (the
+    # stationary methods) get a looser two-sided comparison.
+    lagged_history: bool = False
+
+
+def _s_richardson(A, p, *, tol, maxiter, key):
+    return richardson(A, p["b"], tol=tol, maxiter=maxiter,
+                                  key=key)
+
+
+def _s_jacobi(A, p, *, tol, maxiter, key):
+    return jacobi(A, p["b"], tol=tol, maxiter=maxiter, key=key,
+                              diag=jnp.diagonal(p["a"]))
+
+
+def _s_cg(A, p, *, tol, maxiter, key):
+    return cg(A, p["b"], tol=tol, maxiter=maxiter, key=key)
+
+
+def _s_bicgstab(A, p, *, tol, maxiter, key):
+    return bicgstab(A, p["b"], tol=tol, maxiter=maxiter, key=key)
+
+
+def _s_gmres(A, p, *, tol, maxiter, key):
+    return gmres(A, p["b"], tol=tol, maxiter=maxiter, key=key)
+
+
+def _s_refine(A, p, *, tol, maxiter, key):
+    return refine(A, p["b"], tol=tol, maxiter=maxiter, key=key,
+                              a_digital=p["a"])
+
+
+def _s_pdhg(A, p, *, tol, maxiter, key):
+    return pdhg(A, p["b"], p["c"], tol=tol, maxiter=maxiter, key=key)
+
+
+def _s_lsqr(A, p, *, tol, maxiter, key):
+    return lsqr(A, p["b"], tol=tol, maxiter=maxiter, key=key)
+
+
+def _s_lsmr(A, p, *, tol, maxiter, key):
+    return lsmr(A, p["b"], tol=tol, maxiter=maxiter, key=key)
+
+
+def _s_lanczos(A, p, *, tol, maxiter, key):
+    return lanczos(A, tol=tol, maxiter=max(maxiter, 2), key=key)
+
+
+def _s_lobpcg(A, p, *, tol, maxiter, key):
+    return lobpcg(A, 2, which="smallest", tol=tol, maxiter=maxiter,
+                         key=key)
+
+
+def _s_admm(A, p, *, tol, maxiter, key):
+    return admm(A, p["b"], p["q"], lo=p["lo"], hi=p["hi"], tol=tol,
+                      maxiter=maxiter, key=key)
+
+
+_REGISTRY = (
+    SolverSpec("richardson", "linear", _s_richardson, _linear_problem,
+               _recompute_linear, lagged_history=True),
+    SolverSpec("jacobi", "linear", _s_jacobi, _diag_dominant_problem,
+               _recompute_linear, lagged_history=True),
+    SolverSpec("cg", "linear", _s_cg, _linear_problem, _recompute_linear,
+               make_trivial=_linear_trivial),
+    SolverSpec("bicgstab", "linear", _s_bicgstab, _linear_problem,
+               _recompute_linear, make_trivial=_linear_trivial),
+    SolverSpec("gmres", "linear", _s_gmres, _linear_problem,
+               _recompute_linear, make_trivial=_linear_trivial),
+    SolverSpec("refine", "linear", _s_refine, _linear_problem,
+               _recompute_linear, make_trivial=_linear_trivial),
+    SolverSpec("pdhg", "lp", _s_pdhg, _lp_problem, _recompute_lp,
+               make_trivial=_lp_trivial, needs_rmatvec=True),
+    SolverSpec("lsqr", "lstsq", _s_lsqr, _lstsq_problem, _recompute_lstsq,
+               make_trivial=_lstsq_trivial, needs_rmatvec=True),
+    SolverSpec("lsmr", "lstsq", _s_lsmr, _lstsq_problem, _recompute_lstsq,
+               make_trivial=_lstsq_trivial, needs_rmatvec=True),
+    # The |beta_k s_k| residual estimate collapses once the Krylov space
+    # exhausts (k ~ n) while float32 orthogonality loss keeps the true Ritz
+    # residual near 1e-3: the honesty floor is the float32 Lanczos floor,
+    # not the generic recompute floor.
+    SolverSpec("lanczos", "eigen", _s_lanczos, _eigen_problem,
+               _recompute_eigen, multi_rhs=False, floor=5e-3),
+    SolverSpec("lobpcg", "eigen", _s_lobpcg, _eigen_problem,
+               _recompute_eigen, make_trivial=_eigen_trivial,
+               multi_rhs=False),
+    SolverSpec("admm", "qp", _s_admm, _qp_problem, _recompute_qp,
+               make_trivial=_qp_trivial, needs_rmatvec=True),
+)
+
+
+def registry() -> tuple:
+    """All registered solvers, in documentation order.  The contract suite
+    parameterizes over this tuple, so a solver added here is automatically
+    held to the residual/convergence/ledger invariants."""
+    return _REGISTRY

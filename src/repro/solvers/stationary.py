@@ -33,12 +33,15 @@ __all__ = ["richardson", "jacobi", "spectral_bounds", "estimate_omega"]
 _TINY = 1e-30
 
 
-def _power_extreme(matvec, n: int, key: jax.Array, iters: int,
-                   shift: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Dominant |eigenvalue| of A (or of shift*I - A) by power iteration.
+def _power_iterate(matvec, n: int, key: jax.Array, iters: int,
+                   shift: Optional[jnp.ndarray] = None):
+    """(unit iterate, dominant |eigenvalue|) of A (or shift*I - A) by power
+    iteration.
 
     Matvec-only: runs unchanged against analog/digital operators; each step
-    consumes a fresh fold of ``key`` for the analog DAC noise.
+    consumes a fresh fold of ``key`` for the analog DAC noise.  The final
+    iterate is exposed (not just the eigenvalue) so Krylov refiners --
+    :func:`repro.solvers.lanczos` -- can seed their basis from it.
     """
     v0 = jax.random.normal(jax.random.fold_in(key, 0), (n, 1), jnp.float32)
     v0 = v0 / jnp.maximum(col_norms(v0), _TINY)
@@ -51,21 +54,40 @@ def _power_extreme(matvec, n: int, key: jax.Array, iters: int,
         lam = col_norms(w)[0]
         return w / jnp.maximum(lam, _TINY), lam
 
-    _, lam = jax.lax.fori_loop(0, iters, body, (v0, jnp.float32(0.0)))
-    return lam
+    v, lam = jax.lax.fori_loop(0, iters, body, (v0, jnp.float32(0.0)))
+    return v, lam
+
+
+def _power_extreme(matvec, n: int, key: jax.Array, iters: int,
+                   shift: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dominant |eigenvalue| only; see :func:`_power_iterate`."""
+    return _power_iterate(matvec, n, key, iters, shift=shift)[1]
 
 
 def spectral_bounds(
     A, *, key: Optional[jax.Array] = None, iters: int = 16,
+    method: str = "power",
 ) -> Tuple[float, float]:
     """(lambda_min, lambda_max) estimates for SPD ``A``, matvec-only.
 
-    ``lambda_max`` by plain power iteration; ``lambda_min`` by a second power
-    iteration on the shifted operator ``lambda_max * I - A`` (whose dominant
-    eigenvalue is ``lambda_max - lambda_min``).  Costs ``2 * iters`` MVMs.
+    ``method="power"``: ``lambda_max`` by plain power iteration, then
+    ``lambda_min`` by a second power iteration on the shifted operator
+    ``lambda_max * I - A`` (whose dominant eigenvalue is
+    ``lambda_max - lambda_min``); costs ``2 * iters`` MVMs.
+    ``method="lanczos"``: both ends from ONE Krylov sweep of
+    :func:`repro.solvers.lanczos` (``iters`` steps; typically sharper per
+    MVM, since Lanczos converges superlinearly at the spectrum ends where
+    the shifted power method crawls).
     """
     op = as_operator(A)
     key = jax.random.PRNGKey(0) if key is None else key
+    if method == "lanczos":
+        from .eigen import lanczos
+        res = lanczos(op, tol=0.0, maxiter=max(int(iters), 2), key=key)
+        return float(res.eigenvalues[0]), float(res.eigenvalues[1])
+    if method != "power":
+        raise ValueError(f"method must be 'power' or 'lanczos', got "
+                         f"{method!r}")
 
     @jax.jit
     def core(key):
@@ -80,9 +102,11 @@ def spectral_bounds(
 
 
 def estimate_omega(A, *, key: Optional[jax.Array] = None,
-                   iters: int = 16) -> float:
-    """The auto relaxation factor :func:`richardson` uses when ``omega=None``."""
-    lmin, lmax = spectral_bounds(A, key=key, iters=iters)
+                   iters: int = 16, method: str = "power") -> float:
+    """The auto relaxation factor :func:`richardson` uses when ``omega=None``;
+    ``method="lanczos"`` swaps the power-iteration bounds for a Lanczos
+    sweep (see :func:`spectral_bounds`)."""
+    lmin, lmax = spectral_bounds(A, key=key, iters=iters, method=method)
     return float(2.0 / (1.05 * lmax + max(lmin, 0.0)))
 
 

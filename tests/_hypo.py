@@ -1,0 +1,134 @@
+"""Hypothesis facade for the test suite.
+
+CI installs ``hypothesis`` as a first-class dependency (see requirements.txt
+and ``--hypothesis-seed=0`` in the workflow), and this module simply
+re-exports it.  Minimal containers without hypothesis fall back to a small
+deterministic engine implementing the subset the suite uses -- ``given`` /
+``settings`` / ``HealthCheck`` and the ``integers`` / ``floats`` /
+``booleans`` / ``sampled_from`` strategies -- so the property tests still
+RUN (a fixed seeded sweep of ``max_examples`` cases) instead of being
+skipped.  Shrinking and coverage-guided generation are hypothesis-only
+luxuries; the invariants themselves are checked either way.
+
+Usage (works against both backends)::
+
+    from _hypo import HAVE_HYPOTHESIS, HealthCheck, given, settings, st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16 - 1), n=st.sampled_from([8, 12]))
+    def test_property(seed, n): ...
+
+Strategies must be passed to ``given`` as KEYWORD arguments -- the fallback
+relies on it, and it keeps real-hypothesis argument binding unambiguous
+under pytest fixtures.
+"""
+import functools
+import inspect
+import random
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI has hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function ``rng -> value`` with map/filter combinators."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate rejected 1000 draws")
+            return _Strategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    st = _Strategies()
+
+    class HealthCheck:
+        """Accepts any attribute access; values are inert markers."""
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+        @staticmethod
+        def all():
+            return []
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        """Records ``max_examples``; every other knob is hypothesis-only."""
+        def deco(fn):
+            fn._hypo_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kwstrategies):
+        """Deterministic sweep: runs the test body on ``max_examples`` draws
+        from a ``random.Random(0)`` stream (the same cases every run -- a
+        regression sweep, not an explorer).  Positional strategies bind to
+        the RIGHTMOST parameters, like real hypothesis."""
+        if not strategies and not kwstrategies:
+            raise TypeError("given() requires at least one strategy")
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            mapping = dict(kwstrategies)
+            if strategies:
+                mapping.update(zip(names[-len(strategies):], strategies))
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hypo_max_examples",
+                            getattr(fn, "_hypo_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in mapping.items()}
+                    fn(*args, **kwargs, **drawn)
+            wrapper._hypo_max_examples = getattr(
+                fn, "_hypo_max_examples", _DEFAULT_MAX_EXAMPLES)
+            # Hide the drawn parameters from pytest's fixture resolution
+            # (real hypothesis does the same): the visible signature keeps
+            # only the non-strategy parameters.
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in mapping])
+            return wrapper
+        return deco

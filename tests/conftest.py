@@ -1,0 +1,158 @@
+"""Shared fixtures: analog-system builders and the cross-path parity harness.
+
+Every placement/backend parity test in the suite used to hand-roll the same
+boilerplate -- pad the matrix, build the capacity-block producer, spin up
+one engine per execution path, run the computation, compare against the
+reference path with ``rel_l2 <= 1e-5``.  :func:`assert_path_parity` is that
+boilerplate, once: give it a dense matrix, a config and a ``run(engine,
+handle)`` callback and it executes the callback across the requested paths
+(same base key => identical programming + DAC draws => draw-identical
+results) and asserts every path agrees with the reference.  Pass a results
+mapping instead to reuse just the comparison half (the grouped-vs-solo
+tests do, where the "paths" are group membership rather than placement).
+
+Path names:
+
+  ``local``      dense handle on the default local engine
+  ``streamed``   traceable capacity-block producer, execution="streamed"
+  ``pallas``     the streamed producer on the pallas tile-step backend
+  ``opaque``     non-traceable producer (host loop) on the streamed engine
+  ``dist-1x1``   producer on execution="distributed" over a 1x1 mesh
+  ``virtual``    the distributed producer with ``resident=False``
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CrossbarConfig, MCAGeometry, get_device, rel_l2
+from repro.engine import AnalogEngine
+
+PARITY_PATHS = ("local", "streamed", "pallas", "opaque", "dist-1x1",
+                "virtual")
+
+
+def spd_system(n, scale=2.0, key=None):
+    """(a, x_true, b) with ``a`` SPD and well-conditioned."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    r = jax.random.normal(key, (n, n), jnp.float32) / n
+    a = r + r.T + scale * jnp.eye(n, dtype=jnp.float32)
+    x_true = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
+    return a, x_true, a @ x_true
+
+
+def analog_cfg(n, device="epiram", ec=True, cell=32):
+    """A crossbar config whose tile grid covers an (n, n) matrix."""
+    geom = MCAGeometry(tile_rows=max(n // (2 * cell), 1),
+                       tile_cols=max(n // (2 * cell), 1),
+                       cell_rows=cell, cell_cols=cell)
+    return CrossbarConfig(device=get_device(device), geom=geom, k_iters=5,
+                          ec=ec)
+
+
+def make_analog(a, device="epiram", ec=True, cell=32, key=None, **kw):
+    """(engine, programmed handle) for a dense matrix on a local engine."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    cfg = analog_cfg(a.shape[0], device=device, ec=ec, cell=cell)
+    engine = AnalogEngine(cfg, **kw)
+    return engine, engine.program(a, key)
+
+
+def block_view(a, cfg):
+    """(mb, nb, cap_m, cap_n) capacity-block view of the padded matrix."""
+    m, n = a.shape
+    cap_m, cap_n = cfg.geom.capacity
+    mb, nb = -(-m // cap_m), -(-n // cap_n)
+    a_pad = jnp.pad(a, ((0, mb * cap_m - m), (0, nb * cap_n - n)))
+    return a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
+
+
+def mesh_1x1():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def path_engine(cfg, path):
+    """The engine owning one named execution path."""
+    if path == "local":
+        return AnalogEngine(cfg)
+    if path in ("streamed", "opaque"):
+        return AnalogEngine(cfg, execution="streamed")
+    if path == "pallas":
+        return AnalogEngine(cfg, execution="streamed", backend="pallas")
+    if path in ("dist-1x1", "virtual"):
+        return AnalogEngine(cfg, execution="distributed", mesh=mesh_1x1())
+    raise ValueError(f"unknown parity path {path!r}")
+
+
+def program_path(engine, a, key, path):
+    """Program the dense matrix onto the engine the way the path demands."""
+    if path == "local":
+        return engine.program(a, key)
+    blocks = block_view(a, engine.cfg)
+    if path == "opaque":
+        producer = lambda i, j: blocks[int(i), int(j)]
+    else:
+        producer = lambda i, j: blocks[i, j]
+    kw = {"resident": False} if path == "virtual" else {}
+    return engine.program(producer, key, shape=a.shape, **kw)
+
+
+def run_paths(a, cfg, run, *, key, paths=PARITY_PATHS):
+    """{path: run(engine, handle)} with every path programmed from the same
+    dense matrix under the same base key."""
+    out = {}
+    for path in paths:
+        engine = path_engine(cfg, path)
+        out[path] = run(engine, program_path(engine, a, key, path))
+    return out
+
+
+def _compare(name, got, want, tol, exact):
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l), \
+        f"path {name!r}: result structure differs from reference"
+    for i, (g, w) in enumerate(zip(got_l, want_l)):
+        if exact:
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(w),
+                err_msg=f"path {name!r} leaf {i} not bit-identical")
+        else:
+            err = float(rel_l2(jnp.asarray(g, jnp.float32),
+                               jnp.asarray(w, jnp.float32)))
+            assert err <= tol, \
+                f"path {name!r} leaf {i}: rel_l2 {err:.3e} > {tol:.1e}"
+
+
+def assert_path_parity(results=None, *, a=None, cfg=None, run=None, key=None,
+                       paths=PARITY_PATHS, reference=None, tol=1e-5,
+                       exact=()):
+    """Assert every path's result matches the reference path's.
+
+    Two calling modes:
+
+    * ``assert_path_parity(a=a, cfg=cfg, run=fn, key=key, paths=...)`` --
+      builds one engine + handle per path via :func:`run_paths`, executes
+      ``run(engine, handle)`` (any pytree of arrays), compares.
+    * ``assert_path_parity({name: pytree, ...}, reference=name)`` -- reuse
+      just the comparison over precomputed results (grouped-vs-solo tests).
+
+    ``reference`` defaults to the first entry.  Paths named in ``exact``
+    must be BIT-identical to the reference; the rest satisfy
+    ``rel_l2 <= tol`` leaf-wise.  Returns the results mapping so callers
+    can run extra assertions (iteration counts, ledgers) on any path.
+    """
+    if results is None:
+        if a is None or cfg is None or run is None or key is None:
+            raise TypeError("need a=, cfg=, run=, key= when no results "
+                            "mapping is given")
+        results = run_paths(a, cfg, run, key=key, paths=paths)
+    names = list(results)
+    reference = names[0] if reference is None else reference
+    want = results[reference]
+    for name in names:
+        if name == reference:
+            continue
+        _compare(name, results[name], want, tol, name in exact)
+    return results

@@ -1,29 +1,14 @@
 """Core MELISO+ unit + property tests: devices, write-verify, EC algebra,
 virtualization, crossbar cost model.
 
-The property tests use ``hypothesis`` when it is installed and are skipped
-otherwise, so the tier-1 suite collects cleanly on minimal containers."""
+The property tests run under ``hypothesis`` when it is installed and under
+the deterministic ``tests/_hypo.py`` sweep otherwise -- they RUN either
+way, no skips on minimal containers."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-try:
-    import hypothesis.strategies as st
-    from hypothesis import given, settings
-except ImportError:                      # pragma: no cover - minimal container
-    class _StrategyStub:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
-
-    st = _StrategyStub()
-
-    def given(*a, **k):
-        return lambda fn: pytest.mark.skip(
-            reason="hypothesis not installed")(fn)
-
-    def settings(*a, **k):
-        return lambda fn: fn
+from _hypo import given, settings, st
 
 from repro.core import (DEVICES, CrossbarConfig, MCAGeometry, WriteStats,
                         adjustable_mat_write_and_verify,
@@ -63,6 +48,7 @@ def test_agsi_converges_slower():
     assert slow.effective_gain < fast.effective_gain
 
 
+@pytest.mark.property
 @given(st.integers(2, 64))
 @settings(max_examples=10, deadline=None)
 def test_quantize_levels(levels):
@@ -94,6 +80,7 @@ def test_write_verify_vector():
 
 
 # ------------------------------------------------------------------ EC algebra
+@pytest.mark.property
 @given(st.floats(0.01, 0.5), st.floats(0.01, 0.5), st.integers(0, 1000))
 @settings(max_examples=20, deadline=None)
 def test_first_order_cancellation_identity(sa, sx, seed):
@@ -114,6 +101,7 @@ def test_first_order_cancellation_identity(sa, sx, seed):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.property
 @given(st.integers(0, 500))
 @settings(max_examples=15, deadline=None)
 def test_fused_equals_faithful(seed):
@@ -156,6 +144,7 @@ def test_denoise_solves_the_system():
 
 
 # -------------------------------------------------------------- virtualization
+@pytest.mark.property
 @given(st.integers(1, 200), st.integers(1, 200), st.integers(1, 4),
        st.integers(1, 4), st.sampled_from([8, 16, 32]))
 @settings(max_examples=25, deadline=None)

@@ -11,6 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_path_parity
+from conftest import block_view as _block_view
+from conftest import mesh_1x1 as _mesh_1x1
 
 from repro.analysis import CallCounter, aval_bound, dispatch_count, trace
 from repro.core import (CrossbarConfig, MCAGeometry, corrected_mvm,
@@ -216,15 +219,6 @@ def test_streamed_requires_shape(problem):
             lambda i, j: jnp.zeros((64, 64)), KEY, shape=(64, 64))
 
 
-def _block_view(a, cfg):
-    """(mb, nb, cap_m, cap_n) capacity-block view of a padded dense matrix."""
-    m, n = a.shape
-    cap_m, cap_n = cfg.geom.capacity
-    mb, nb = -(-m // cap_m), -(-n // cap_n)
-    a_pad = jnp.pad(a, ((0, mb * cap_m - m), (0, nb * cap_n - n)))
-    return a_pad.reshape(mb, cap_m, nb, cap_n).transpose(0, 2, 1, 3)
-
-
 def _counting_producer(blocks):
     """Block producer wrapped in the verifier's trace-time call counter."""
     return CallCounter(lambda i, j: blocks[i, j])
@@ -374,11 +368,6 @@ def test_input_write_stats_rounds_up_nondivisible():
 
 
 # ------------------------------------------- distributed producer placement
-def _mesh_1x1():
-    from repro.launch.mesh import make_mesh
-    return make_mesh((1, 1), ("data", "model"))
-
-
 def test_distributed_producer_1x1_matches_streamed(problem):
     """Producer-driven distributed execution on a 1x1 mesh is draw-identical
     to the single-device streamed path: same global block-key schedule, same
@@ -536,39 +525,21 @@ def test_rmvm_parity_across_paths(problem):
     one-shot (resident=False) scan variant and the opaque host loop."""
     a, _ = problem
     cfg = make_cfg()
-    blocks = _block_view(a, cfg)
     y = jax.random.normal(jax.random.fold_in(KEY, 6), (a.shape[0],))
+    assert_path_parity(a=a, cfg=cfg, key=KEY,
+                       paths=("local", "streamed", "pallas", "opaque",
+                              "dist-1x1", "virtual"),
+                       run=lambda eng, A: eng.rmvm(A, y, key=KEY))
 
-    local = AnalogEngine(cfg)
-    z_ref = local.rmvm(local.program(a, KEY), y, key=KEY)
-
+    # the opaque producer really is the non-traceable host loop
+    blocks = _block_view(a, cfg)
     streamed = AnalogEngine(cfg, execution="streamed")
-    A_s = streamed.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
-    z_s = streamed.rmvm(A_s, y, key=KEY)
-    assert float(rel_l2(z_s, z_ref)) <= 1e-5
-
-    pal = AnalogEngine(cfg, execution="streamed", backend="pallas")
-    A_p = pal.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
-    z_p = pal.rmvm(A_p, y, key=KEY)
-    assert float(rel_l2(z_p, z_ref)) <= 1e-5
-
-    opaque = lambda i, j: blocks[int(i), int(j)]
-    A_o = streamed.program(opaque, KEY, shape=a.shape)
+    A_o = streamed.program(lambda i, j: blocks[int(i), int(j)], KEY,
+                           shape=a.shape)
     assert not A_o.block_traceable
-    z_o = streamed.rmvm(A_o, y, key=KEY)
-    assert float(rel_l2(z_o, z_s)) <= 1e-5
 
-    # 1x1-mesh draw identity: the distributed transposed sweep consumes the
-    # SAME global block-key schedule as the streamed one.
-    dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
-    A_d = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape)
-    z_d = dist.rmvm(A_d, y, key=KEY)
-    assert float(rel_l2(z_d, z_s)) <= 1e-5
-    A_v = dist.program(lambda i, j: blocks[i, j], KEY, shape=a.shape,
-                       resident=False)
-    z_v = dist.rmvm(A_v, y, key=KEY)
-    assert float(rel_l2(z_v, z_d)) <= 1e-5
     # dense distributed placement through the same transposed stage
+    dist = AnalogEngine(cfg, execution="distributed", mesh=_mesh_1x1())
     A_dd = dist.program(a, KEY)
     z_dd = dist.rmvm(A_dd, y, key=KEY)
     assert float(rel_l2(z_dd, a.T @ y)) < 5e-2

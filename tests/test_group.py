@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_path_parity
+from conftest import mesh_1x1 as _mesh_1x1
 
 from repro.analysis import dispatch_count, trace
 from repro.core import (CrossbarConfig, MCAGeometry, get_device, rel_l2)
@@ -86,6 +88,24 @@ def test_group_of_handles_equals_program_group(stack):
 
 
 # ------------------------------------------------------------------ parity
+def _grouped_vs_solo(engine, G, handles, x, y, call_key, *, exact=False):
+    """The grouped-vs-solo comparison all placement parity tests share:
+    grouped member g against the solo handle executed under fold_in(key, g),
+    both directions, via the conftest parity harness (results-mapping mode,
+    where the "paths" are group membership rather than placement)."""
+    Y = engine.group_mvm(G, x, key=call_key)
+    Z = engine.group_rmvm(G, y, key=call_key)
+    solo = []
+    for g, A in enumerate(handles):
+        kg = jax.random.fold_in(call_key, g)
+        solo.append((engine.mvm(A, x, key=kg), engine.rmvm(A, y, key=kg)))
+    grouped = [(Y[g], Z[g]) for g in range(len(handles))]
+    assert_path_parity({"solo": solo, "grouped": grouped},
+                       reference="solo",
+                       exact=("grouped",) if exact else ())
+    return Y, Z
+
+
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
 def test_group_solo_parity_local(stack, backend):
     """Grouped member g == solo handle under fold_in(key, g), both
@@ -95,14 +115,9 @@ def test_group_solo_parity_local(stack, backend):
     engine = AnalogEngine(make_cfg(), backend=backend)
     G = engine.program_group(a, KEY)
     handles = _solo_handles(engine, a, KEY)
-    k = jax.random.fold_in(KEY, 4)
-    Y = engine.group_mvm(G, x, key=k)
-    Z = engine.group_rmvm(G, y, key=k)
+    Y, Z = _grouped_vs_solo(engine, G, handles, x, y,
+                            jax.random.fold_in(KEY, 4))
     assert Y.shape == (SIZE, 100) and Z.shape == (SIZE, 90)
-    for g, A in enumerate(handles):
-        kg = jax.random.fold_in(k, g)
-        assert float(rel_l2(Y[g], engine.mvm(A, x, key=kg))) <= 1e-5
-        assert float(rel_l2(Z[g], engine.rmvm(A, y, key=kg))) <= 1e-5
 
 
 def test_group_solo_parity_streamed(stack):
@@ -114,25 +129,14 @@ def test_group_solo_parity_streamed(stack):
                  for g in range(SIZE)]
     G = engine.program_group(producers, KEY, shape=(100, 90))
     assert G.da_blocks is None          # streamed groups re-derive da in-scan
-    k = jax.random.fold_in(KEY, 5)
-    Y = engine.group_mvm(G, x, key=k)
-    Z = engine.group_rmvm(G, y, key=k)
-    for g in range(SIZE):
-        A = engine.program(producers[g], jax.random.fold_in(KEY, g),
-                           shape=(100, 90))
-        kg = jax.random.fold_in(k, g)
-        assert float(rel_l2(Y[g], engine.mvm(A, x, key=kg))) <= 1e-5
-        assert float(rel_l2(Z[g], engine.rmvm(A, y, key=kg))) <= 1e-5
+    handles = [engine.program(producers[g], jax.random.fold_in(KEY, g),
+                              shape=(100, 90)) for g in range(SIZE)]
+    _grouped_vs_solo(engine, G, handles, x, y, jax.random.fold_in(KEY, 5))
 
 
 def _block(a, cfg, i, j):
     cm, cn = cfg.geom.capacity
     return jax.lax.dynamic_slice(a, (i * cm, j * cn), (cm, cn))
-
-
-def _mesh_1x1():
-    from repro.launch.mesh import make_mesh
-    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_group_solo_bit_identical_distributed_1x1(stack):
@@ -144,15 +148,8 @@ def test_group_solo_bit_identical_distributed_1x1(stack):
     G = engine.program_group(a, KEY)
     assert G.mesh_sharded
     handles = _solo_handles(engine, a, KEY)
-    k = jax.random.fold_in(KEY, 6)
-    Y = engine.group_mvm(G, x, key=k)
-    Z = engine.group_rmvm(G, y, key=k)
-    for g, A in enumerate(handles):
-        kg = jax.random.fold_in(k, g)
-        np.testing.assert_array_equal(np.asarray(Y[g]),
-                                      np.asarray(engine.mvm(A, x, key=kg)))
-        np.testing.assert_array_equal(np.asarray(Z[g]),
-                                      np.asarray(engine.rmvm(A, y, key=kg)))
+    _grouped_vs_solo(engine, G, handles, x, y, jax.random.fold_in(KEY, 6),
+                     exact=True)
 
 
 def test_default_key_schedule_matches_solo_calls(stack):

@@ -5,11 +5,22 @@ Runs pytest with the given arguments, collects failing test ids from the
 junit XML, and compares them against the allowlist in
 ``tests/known_failures.txt`` (one ``path::testid`` per line, ``#`` comments).
 Exit code is non-zero only when a failure is NOT on the allowlist, so a
-known-bad test never masks a fresh regression -- and stale allowlist entries
-(now passing) are reported so the list shrinks over time.
+known-bad test never masks a fresh regression.  Stale allowlist entries
+(now passing) FAIL the gate too: an entry that lingers after its test is
+fixed would silently re-tolerate the next regression of that test, so the
+list must shrink the moment it can (``--allow-stale`` downgrades this to a
+report for local triage runs).
+
+With ``--coverage-xml`` the gate also reads a Cobertura XML (as written by
+``pytest --cov --cov-report=xml``) and fails when any module under the
+watched prefixes (default ``src/repro/solvers/``) has ZERO executed lines:
+a brand-new solver module that no test imports is a contract violation of
+the registry-driven suite, not a coverage-percentage judgement call.
 
     python tools/check_regressions.py -- -m "not slow"
     python tools/check_regressions.py --baseline tests/known_failures.txt -- -q
+    python tools/check_regressions.py --coverage-xml coverage.xml -- -q \\
+        --cov=repro.solvers --cov-report=xml:coverage.xml
 """
 from __future__ import annotations
 
@@ -68,10 +79,41 @@ def failed_ids(junit_path: str) -> set:
     return out
 
 
+def uncovered_modules(coverage_xml: str, prefixes: tuple) -> list:
+    """Watched-prefix modules with statements but ZERO executed lines.
+
+    Cobertura ``filename`` attributes are relative to the coverage source
+    root (``repro/solvers/x.py`` when run with ``PYTHONPATH=src``), so
+    matching is on the normalized suffix of each watched prefix.
+    """
+    tree = ET.parse(coverage_xml)
+    tails = tuple(p.replace("\\", "/").strip("/").split("src/")[-1] + "/"
+                  for p in prefixes)
+    out = []
+    for cls in tree.iter("class"):
+        fname = (cls.get("filename") or "").replace("\\", "/")
+        if not any(t in fname or fname.startswith(t) for t in tails):
+            continue
+        lines = list(cls.iter("line"))
+        if lines and all(int(ln.get("hits", "0")) == 0 for ln in lines):
+            out.append(fname)
+    return sorted(set(out))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
                     default=os.path.join(REPO, "tests", "known_failures.txt"))
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="report stale allowlist entries without failing "
+                         "(local triage); CI keeps the default hard gate")
+    ap.add_argument("--coverage-xml", default=None,
+                    help="Cobertura XML from the pytest run; enables the "
+                         "zero-coverage module gate")
+    ap.add_argument("--coverage-watch", action="append", default=None,
+                    metavar="PREFIX",
+                    help="source prefix the zero-coverage gate watches "
+                         "(repeatable; default src/repro/solvers/)")
     ap.add_argument("pytest_args", nargs="*",
                     help="arguments forwarded to pytest (after --)")
     args = ap.parse_args()
@@ -101,6 +143,7 @@ def main() -> int:
     stale = sorted(k for k in known if k not in failures)
     expected = sorted(f for f in failures if f in known)
 
+    rc = 0
     if expected:
         print(f"\n{len(expected)} known failure(s) (allowlisted):")
         for f in expected:
@@ -110,13 +153,38 @@ def main() -> int:
               f"{args.baseline}:")
         for f in stale:
             print(f"  STALE {f}")
+        if not args.allow_stale:
+            print("stale entries fail the gate (a lingering entry would "
+                  "mask that test's NEXT regression); prune the list or "
+                  "pass --allow-stale for local triage.")
+            rc = 1
     if new:
         print(f"\n{len(new)} NEW failure(s):")
         for f in new:
             print(f"  NEW   {f}")
-        return 1
-    print("\ncheck_regressions: no new failures.")
-    return 0
+        rc = 1
+
+    if args.coverage_xml:
+        if not os.path.exists(args.coverage_xml):
+            print(f"\ncheck_regressions: --coverage-xml "
+                  f"{args.coverage_xml} was not produced by the run.")
+            rc = rc or 1
+        else:
+            watch = tuple(args.coverage_watch or ("src/repro/solvers/",))
+            dead = uncovered_modules(args.coverage_xml, watch)
+            if dead:
+                print(f"\n{len(dead)} watched module(s) with ZERO covered "
+                      "lines (no test imports them):")
+                for f in dead:
+                    print(f"  UNCOVERED {f}")
+                rc = 1
+            else:
+                print(f"\ncoverage gate: no zero-coverage modules under "
+                      f"{', '.join(watch)}.")
+
+    if rc == 0:
+        print("\ncheck_regressions: no new failures.")
+    return rc
 
 
 if __name__ == "__main__":
